@@ -1,0 +1,13 @@
+"""benchmarks — one module per paper table/figure + the roofline reporter.
+
+  bench_topology_storage   Fig. 14   2-level-table storage vs unrolled baseline
+  bench_snn_models         Fig. 13d  Table II SNNs: TaiBai vs GPU power/efficiency
+  bench_mapping_tradeoff   Fig. 13e  cores <-> throughput/efficiency trade-off
+  bench_applications       Fig. 15   ECG / SHD / BCI accuracy + energy, incl.
+                                     the homogeneous ablations
+  bench_energy             Tab. III/IV  pJ/SOP + chip characteristics
+  bench_kernels            (TPU adaptation) event-gated block-skip FLOP fraction
+  bench_roofline           §Roofline reporter from experiments/ JSON records
+
+Run everything: PYTHONPATH=src python -m benchmarks.run
+"""

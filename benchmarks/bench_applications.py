@@ -1,0 +1,144 @@
+"""Fig. 15 reproduction: the three applications (ECG, SHD speech, BCI) —
+accuracy, simulated power, and efficiency vs GPU, including the paper's
+'TaiBai-homogeneous' ablations (SRNN w/o heterogeneous neurons, DHSNN w/o
+dendrites, BCI w/o on-chip learning).
+
+Datasets are the shape/statistics-faithful synthetic generators (data/
+spikes.py) — accuracies are therefore *relative* orderings on this data,
+not QTDB/SHD absolute percentages (documented in DESIGN.md §7)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events
+from repro.core.simulator import LayerStats, simulate
+from repro.core.snn_layers import (BCIConfig, bci_finetune_fc, bci_forward,
+                                   bci_init, make_dhsnn_shd, make_srnn_ecg)
+from repro.data.spikes import gen_bci_trials, gen_ecg_qtdb, gen_shd_spikes
+
+
+def _clipped_sgd(loss_fn, params, steps, lr):
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    for _ in range(steps):
+        l, g = grad_fn(params)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(g)))
+        sc = jnp.minimum(1.0, 1.0 / (gn + 1e-9))
+        params = jax.tree.map(
+            lambda p, gg: p - lr * sc * gg if gg is not None else p, params, g)
+    return params, float(l)
+
+
+def ecg_task(heterogeneous: bool) -> Dict:
+    xs, ys = gen_ecg_qtdb(16, T=200)
+    x = jnp.asarray(xs.transpose(1, 0, 2))
+    y = jnp.asarray(ys.T)
+    nodes, params = make_srnn_ecg(jax.random.PRNGKey(0),
+                                  heterogeneous=heterogeneous, n_hidden=48)
+
+    def loss(params):
+        _, outs, _ = events.run(nodes, params, x)
+        logp = jax.nn.log_softmax(outs, -1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], -1))
+
+    params, _ = _clipped_sgd(loss, params, 120, 0.1)
+    xt, yt = gen_ecg_qtdb(8, seed=7, T=200)
+    _, outs, recs = events.run(nodes, params,
+                               jnp.asarray(xt.transpose(1, 0, 2)),
+                               record=("hidden",))
+    acc = float(jnp.mean(jnp.argmax(outs, -1) == jnp.asarray(yt.T)))
+    rate = float(jnp.mean(recs["hidden"]))
+    return {"accuracy": acc, "spike_rate": rate,
+            "stats": [LayerStats("hidden", 48, 48 + 6, max(rate, 1e-3),
+                                 2.0 * 48 * (4 + 48))]}
+
+
+def shd_task(dendritic: bool) -> Dict:
+    xs, ys = gen_shd_spikes(32, T=60)
+    x = jnp.asarray(xs.transpose(1, 0, 2))
+    y = jnp.asarray(ys)
+    nodes, params = make_dhsnn_shd(jax.random.PRNGKey(1), n_hidden=48,
+                                   dendritic=dendritic)
+
+    def loss(params):
+        _, outs, _ = events.run(nodes, params, x)
+        logits = jnp.mean(outs, 0)
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(y)), y])
+
+    params, _ = _clipped_sgd(loss, params, 120, 0.2)
+    xt, yt = gen_shd_spikes(32, T=60, seed=11)
+    _, outs, recs = events.run(nodes, params,
+                               jnp.asarray(xt.transpose(1, 0, 2)),
+                               record=("hidden",))
+    acc = float(jnp.mean(jnp.argmax(jnp.mean(outs, 0), -1) == jnp.asarray(yt)))
+    rate = float(jnp.mean(recs["hidden"]))
+    return {"accuracy": acc, "spike_rate": rate,
+            "stats": [LayerStats("hidden", 48, 20, max(rate, 1e-3),
+                                 2.0 * 48 * (4 * 700))]}
+
+
+def bci_task(onchip: bool) -> Dict:
+    cfg = BCIConfig(n_channels=64, n_steps=30, n_paths=8, d_path=16)
+    params = bci_init(jax.random.PRNGKey(2), cfg)
+    x0, y0 = gen_bci_trials(128, day=0, n_channels=64, n_bins=30)
+    x0j, y0j = jnp.asarray(x0), jnp.asarray(y0)
+
+    def loss(params):
+        logits, _ = bci_forward(params, x0j, cfg)
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(y0)), y0j])
+
+    params, _ = _clipped_sgd(loss, params, 250, 0.1)
+
+    accs = []
+    rates = []
+    for day in (1, 2, 3):
+        xt, yt = gen_bci_trials(64, day=day, n_channels=64, n_bins=30, seed=day)
+        p = params
+        if onchip:
+            xf, yf = gen_bci_trials(32, day=day, n_channels=64, n_bins=30,
+                                    seed=100 + day)
+            p, _ = bci_finetune_fc(params, jnp.asarray(xf), jnp.asarray(yf),
+                                   cfg, lr=0.05, steps=25)
+        logits, spikes = bci_forward(p, jnp.asarray(xt), cfg)
+        accs.append(float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(yt))))
+        rates.append(float(jnp.mean(spikes)))
+    rate = float(np.mean(rates))
+    return {"accuracy": float(np.mean(accs)), "spike_rate": rate,
+            "stats": [LayerStats("paths", 8 * 16, 64, max(rate, 1e-3),
+                                 2.0 * 8 * 16 * 64 * 30)]}
+
+
+def run() -> Dict:
+    print("=== Fig. 15: applications (accuracy / power / efficiency) ===")
+    out = {}
+    for name, fn, flag_name in (("ecg_srnn", ecg_task, "heterogeneous"),
+                                ("shd_dhsnn", shd_task, "dendritic"),
+                                ("bci_decoder", bci_task, "on-chip learning")):
+        full = fn(True)
+        homog = fn(False)
+        rep = simulate(full["stats"], timesteps=100)
+        out[name] = {
+            "accuracy": full["accuracy"],
+            "accuracy_homogeneous": homog["accuracy"],
+            "spike_rate": full["spike_rate"],
+            "power_w": rep.power_w, "gpu_power_w": rep.gpu_power_w,
+            "power_ratio_x": rep.power_ratio_x,
+            "efficiency_x": rep.efficiency_x,
+        }
+        marker = "+" if full["accuracy"] >= homog["accuracy"] else "-"
+        print(f"{name:12s} acc {full['accuracy']:.3f} "
+              f"(homog {homog['accuracy']:.3f} [{marker}], no {flag_name})  "
+              f"power {rep.power_w:5.2f} W ({rep.power_ratio_x:5.0f}x less)  "
+              f"eff {rep.efficiency_x:6.1f}x")
+    mean_p = np.mean([m["power_w"] for m in out.values()])
+    print(f"mean TaiBai power {mean_p:.2f} W (paper: ~0.34 W); "
+          f"efficiency ratios (paper: 296-855x)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

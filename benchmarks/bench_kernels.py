@@ -1,0 +1,57 @@
+"""TPU-adaptation benchmark: event-gated block sparsity effectiveness.
+
+The chip exploits word-granular event sparsity; the TPU adaptation skips
+(bm x bk) blocks. This benchmark sweeps spike rates (incl. the paper's
+measured 1.2 / 2.5 / 8 / 13 / 33 %) and both spike layouts, and reports the
+fraction of MXU block-work that survives — the kernel's effective FLOP
+fraction — plus the linrec kernel's arithmetic-vs-serial trade."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.spikemm.ops import occupancy_fraction
+
+RATES = (0.012, 0.025, 0.08, 0.13, 0.33)
+
+
+def run() -> Dict:
+    print("=== event-gated block sparsity: surviving FLOP fraction ===")
+    key = jax.random.PRNGKey(0)
+    M, K = 4096, 4096
+    out = {"random": {}, "structured": {}}
+    for rate in RATES:
+        s_rand = (jax.random.uniform(key, (M, K)) < rate).astype(jnp.float32)
+        # structured: the mapping pass PACKS active populations contiguously
+        # (channel-order partition, zigzag placement), so activity occupies a
+        # dense corner and whole blocks go silent
+        m_act = max(1, int(M * min(1.0, rate * 4)))
+        k_act = max(1, int(K * min(1.0, rate * 4)))
+        body = (jax.random.uniform(jax.random.fold_in(key, 2),
+                                   (m_act, k_act)) < 1 / 16
+                ).astype(jnp.float32)
+        s_struct = jnp.zeros((M, K)).at[:m_act, :k_act].set(body)
+        for name, s in (("random", s_rand), ("structured", s_struct)):
+            frac = float(occupancy_fraction(s, 128, 512))
+            true_rate = float(jnp.mean(s != 0))
+            out[name][rate] = {"block_fraction": frac, "true_rate": true_rate}
+        print(f"rate {rate:5.3f}  random-layout blocks {out['random'][rate]['block_fraction']:.3f}  "
+              f"structured-layout blocks {out['structured'][rate]['block_fraction']:.3f}")
+    print("(random word-sparsity defeats block skipping — the mapping pass's"
+          " population packing is what converts event sparsity into TPU wins)")
+
+    # linrec: chunk-parallel arithmetic expansion vs serial
+    ct = 256
+    expansion = 3 * np.log2(ct) / 2
+    print(f"linrec chunk={ct}: {expansion:.1f}x VPU flops vs serial form; "
+          f"HBM streams identical (bandwidth-bound => free)")
+    out["linrec_expansion"] = expansion
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Fig. 13e reproduction: compiler-controlled mapping of one SNN, sweeping
+the optimization objective from minimum-cores to maximum-throughput.
+
+Paper: cores rise 4x (182 -> 749) while energy efficiency falls 1.7x
+(6190 -> 3590 FPS/W) as the objective moves toward throughput."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.snn_models import MODELS, to_ops
+from repro.core.mapping import CORE_NEURONS, compile_network, fuse_ops, merge_cores, partition
+from repro.core.simulator import LayerStats, simulate
+
+
+def run() -> Dict:
+    print("=== Fig. 13e: cores <-> throughput/efficiency trade-off ===")
+    specs, _ = MODELS["5blocks_net"]()
+    ops = to_ops(specs)
+    rng = np.random.default_rng(1)
+    points = []
+    # sweep the per-core population budget: small budget = spread = throughput
+    for frac in (1.0, 0.5, 0.25, 0.125):
+        ir = fuse_ops([o for o in ops])
+        cores = partition(ir, core_neurons=max(8, int(CORE_NEURONS * frac)))
+        if frac == 1.0:
+            cores = merge_cores(cores, ir)
+        n = len(cores)
+        stats = [LayerStats(o.name, o.n_neurons, o.fan_in, 0.13,
+                            2.0 * o.n_neurons * o.fan_in)
+                 for o in ir if o.n_neurons]
+        # more cores = more parallel compute lanes = faster, but every
+        # spike multicasts to more regions over longer routes = more energy
+        rep = simulate(stats, timesteps=8, parallel_send=4,
+                       parallel_speedup=1.0 / frac,
+                       replication=1.0 / frac,
+                       hops_per_packet=2.0 + 2.0 / frac)
+        eff = rep.throughput_fps / rep.power_w
+        points.append({"core_budget_frac": frac, "n_cores": n,
+                       "fps": rep.throughput_fps, "power_w": rep.power_w,
+                       "fps_per_w": eff})
+        print(f"budget {frac:5.3f}  cores {n:5d}  fps {rep.throughput_fps:9.1f}  "
+              f"eff {eff:9.1f} FPS/W")
+    c = [p["n_cores"] for p in points]
+    e = [p["fps_per_w"] for p in points]
+    print(f"cores x{max(c)/min(c):.1f} (paper: x4.1), "
+          f"efficiency /{max(e)/min(e):.2f} (paper: /1.7)")
+    return {"points": points, "cores_ratio": max(c) / min(c),
+            "efficiency_drop": max(e) / min(e)}
+
+
+if __name__ == "__main__":
+    run()

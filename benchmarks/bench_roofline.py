@@ -1,0 +1,55 @@
+"""§Roofline reporter: renders the per-cell three-term table from the
+experiments/ JSON records (produced by repro.roofline.run + launch.dryrun).
+
+This benchmark only READS records — compiling the 40-cell sweep is the
+launchers' job — so `python -m benchmarks.run` stays fast."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+ROOFLINE_DIR = os.environ.get("REPRO_ROOFLINE_DIR", "experiments/roofline")
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(d: str) -> Dict[str, Dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        out[os.path.basename(path)[:-5]] = rec
+    return out
+
+
+def run() -> Dict:
+    print("=== §Roofline: per-cell three-term analysis (16x16 pod) ===")
+    recs = load_records(ROOFLINE_DIR)
+    if not recs:
+        print(f"(no records in {ROOFLINE_DIR} — run "
+              f"`python -m repro.roofline.run --all` first)")
+        return {}
+    ok = {k: r for k, r in recs.items() if r.get("status") == "ok"}
+    print(f"{'cell':42s} {'C(ms)':>9s} {'M(ms)':>9s} {'X(ms)':>9s} "
+          f"{'dom':>6s} {'useful':>7s} {'roofl%':>7s}")
+    for k, r in sorted(ok.items()):
+        print(f"{k:42s} {r['compute_s']*1e3:9.1f} {r['memory_s']*1e3:9.1f} "
+              f"{r['collective_s']*1e3:9.1f} {r['dominant'][:6]:>6s} "
+              f"{r['useful_ratio']:7.2f} {100*r['roofline_fraction']:7.2f}")
+    skipped = {k: r for k, r in recs.items() if r.get("status") == "skipped"}
+    for k, r in sorted(skipped.items()):
+        print(f"{k:42s} SKIPPED: {r['reason'][:60]}")
+
+    dr = load_records(DRYRUN_DIR)
+    n_ok = sum(1 for r in dr.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in dr.values() if r.get("status") == "skipped")
+    n_err = len(dr) - n_ok - n_skip
+    print(f"--- dry-run: {n_ok} compiled ok, {n_skip} skipped, "
+          f"{n_err} errors over {len(dr)} (cell x mesh) records ---")
+    return {"roofline": ok, "dryrun_ok": n_ok, "dryrun_err": n_err}
+
+
+if __name__ == "__main__":
+    run()

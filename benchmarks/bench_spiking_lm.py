@@ -1,0 +1,79 @@
+"""Paper-technique composability on LMs: spiking (binarized) FFN activations.
+
+DESIGN.md §6 claims the TaiBai technique composes onto the assigned LM
+architectures via `spiking_ffn` without breaking training. This benchmark
+trains a reduced qwen2-family model with and without spiking FFN on the
+markov stream and reports:
+  * final loss (both must learn),
+  * the FFN event rate (fraction of nonzero hidden activations),
+  * the block-occupancy fraction the spikemm kernel would execute at that
+    rate (the deployment-path FLOP fraction for the down-projection).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import TokenStream
+from repro.kernels.spikemm.ops import occupancy_fraction
+from repro.models import lm
+from repro.models.blocks import mlp_apply
+from repro.core.surrogate import spike
+from repro.optim.adamw import AdamWConfig
+
+STEPS = 40
+
+
+def _train(spiking: bool) -> Dict:
+    cfg = get_smoke_config("qwen2-1.5b").replace(
+        dtype="float32", vocab_size=64, spiking_ffn=spiking)
+    stream = TokenStream(cfg.vocab_size, 32, 8, seed=0)
+    state = lm.init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(lm.make_train_step(cfg, AdamWConfig(lr=3e-3)))
+    loss = None
+    for i in range(STEPS):
+        state, m = step(state, {"tokens": jnp.asarray(
+            stream.batch_at(i)["tokens"])})
+        loss = float(m["loss"])
+
+    # measure the FFN event rate on a held-out batch
+    batch = jnp.asarray(stream.batch_at(999)["tokens"])[:, :-1]
+    params = state["params"]
+    from repro.models.blocks import embed_apply, rms_norm
+    h = embed_apply(params["embed"], batch, jnp.float32)
+    layer0 = jax.tree.map(lambda x: x[0], params["layers"])
+    # the real block normalizes before the MLP — the probe must too
+    x = rms_norm(h, layer0["norm2"], cfg.norm_eps)
+    dt = h.dtype
+    hmid = jax.nn.silu(x @ layer0["mlp"]["w_gate"].astype(dt)) * (
+        x @ layer0["mlp"]["w_up"].astype(dt))
+    if spiking:
+        # the same binarization mlp_apply uses (keep in sync with blocks.py)
+        hmid = spike(hmid - 0.05, "sigmoid", 4.0)
+    rate = float(jnp.mean(hmid != 0))
+    occ = float(occupancy_fraction(hmid.reshape(-1, hmid.shape[-1])))
+    return {"loss": loss, "event_rate": rate, "block_occupancy": occ}
+
+
+def run() -> Dict:
+    print("=== spiking-FFN composability on qwen2-family LM ===")
+    out = {}
+    for spiking in (False, True):
+        r = _train(spiking)
+        out["spiking" if spiking else "dense"] = r
+        print(f"{'spiking' if spiking else 'dense':8s} loss {r['loss']:.3f}  "
+              f"FFN event rate {r['event_rate']:.1%}  "
+              f"block occupancy {r['block_occupancy']:.2f}")
+    lnv = float(jnp.log(64.0))
+    assert out["spiking"]["loss"] < lnv, "spiking LM failed to learn"
+    print(f"(both < ln(V)={lnv:.2f}: the technique composes; the spiking "
+          f"variant's down-projection runs event-gated on kernels/spikemm)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Run every benchmark: `PYTHONPATH=src python -m benchmarks.run`.
+
+Writes the aggregate to experiments/bench_results.json."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+
+from benchmarks import (bench_applications, bench_energy, bench_kernels,
+                        bench_mapping_tradeoff, bench_roofline,
+                        bench_snn_models, bench_spiking_lm,
+                        bench_topology_storage)
+
+SUITES = [
+    ("topology_storage", bench_topology_storage),
+    ("snn_models", bench_snn_models),
+    ("mapping_tradeoff", bench_mapping_tradeoff),
+    ("kernels", bench_kernels),
+    ("energy", bench_energy),
+    ("applications", bench_applications),
+    ("spiking_lm", bench_spiking_lm),
+    ("roofline", bench_roofline),
+]
+
+
+def main():
+    results = {}
+    failures = 0
+    for name, mod in SUITES:
+        print(f"\n{'='*72}\n[{name}]")
+        t0 = time.time()
+        try:
+            results[name] = {"result": mod.run(),
+                             "seconds": round(time.time() - t0, 1)}
+        except Exception as e:
+            failures += 1
+            results[name] = {"error": repr(e)}
+            traceback.print_exc()
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"\n{'='*72}\nwrote experiments/bench_results.json; "
+          f"{len(SUITES) - failures}/{len(SUITES)} suites ok")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""ECG band recognition with the heterogeneous SRNN (paper §V-B3, Fig. 15).
+
+Trains the ALIF-hidden SRNN on level-crossing-coded synthetic QTDB-style
+waveforms, per-timestep band classification (P/PQ/QR/RS/ST/TP), and compares
+against the homogeneous (pure-LIF) ablation.
+
+Run: PYTHONPATH=src python examples/ecg_srnn.py [--steps 150]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events
+from repro.core.snn_layers import make_srnn_ecg
+from repro.data.spikes import gen_ecg_qtdb
+
+
+def train(heterogeneous: bool, steps: int, T: int = 200):
+    xs, ys = gen_ecg_qtdb(16, T=T)
+    x = jnp.asarray(xs.transpose(1, 0, 2))
+    y = jnp.asarray(ys.T)
+    nodes, params = make_srnn_ecg(jax.random.PRNGKey(0),
+                                  heterogeneous=heterogeneous, n_hidden=48)
+
+    @jax.jit
+    def loss_grad(params):
+        def loss(params):
+            _, outs, _ = events.run(nodes, params, x)
+            logp = jax.nn.log_softmax(outs, -1)
+            return -jnp.mean(jnp.take_along_axis(logp, y[..., None], -1))
+        return jax.value_and_grad(loss)(params)
+
+    for i in range(steps):
+        l, g = loss_grad(params)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(gg))
+                          for gg in jax.tree.leaves(g)))
+        sc = jnp.minimum(1.0, 1.0 / (gn + 1e-9))
+        params = jax.tree.map(lambda p, gg: p - 0.1 * sc * gg
+                              if gg is not None else p, params, g)
+        if i % 25 == 0:
+            print(f"  step {i:4d} loss {float(l):.4f}")
+
+    xt, yt = gen_ecg_qtdb(8, seed=7, T=T)
+    _, outs, _ = events.run(nodes, params, jnp.asarray(xt.transpose(1, 0, 2)))
+    acc = float(jnp.mean(jnp.argmax(outs, -1) == jnp.asarray(yt.T)))
+    return acc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+    print("heterogeneous (ALIF hidden):")
+    het = train(True, args.steps)
+    print("homogeneous ablation (LIF hidden):")
+    hom = train(False, args.steps)
+    print(f"\nper-timestep band accuracy: ALIF {het:.3f} vs LIF {hom:.3f} "
+          f"(paper Fig. 15a compares the same pair on real QTDB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""End-to-end LM training driver: train a ~100M-param qwen2-family model for
+a few hundred steps with the full production stack — config system, data
+pipeline, AdamW+cosine, fault-tolerant loop with async checkpoints.
+
+CPU note: the container trains a width-reduced (~10M) variant by default so
+the run finishes in minutes; pass --full-100m for the 100M configuration
+(sized for a real accelerator; the launch/dryrun.py artifacts prove the
+full-scale lowering). Both use the identical code path.
+
+Run: PYTHONPATH=src python examples/lm_train.py [--steps 300] [--full-100m]
+"""
+
+import argparse
+
+from repro.launch import train as train_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_train")
+    args = ap.parse_args()
+
+    if args.full_100m:
+        # ~100M params: 12 x d768 (llama-style ratios), 8k vocab
+        extra = ["--d-model", "768", "--n-layers", "12",
+                 "--batch", "16", "--seq", "512"]
+    else:
+        # ~10M params: CPU-friendly, same family/code path
+        extra = ["--d-model", "256", "--n-layers", "6",
+                 "--batch", "8", "--seq", "128"]
+
+    report = train_cli.main([
+        "--arch", "qwen2-1.5b", "--smoke", *extra,
+        "--steps", str(args.steps), "--lr", "1e-3",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+    ])
+    print(f"\nloss trajectory: start {report.losses[0]:.3f} "
+          f"-> end {report.losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

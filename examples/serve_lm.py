@@ -1,0 +1,23 @@
+"""Batched serving example: cohort prefill + KV-cache decode on a small
+model, with greedy-determinism check.
+
+Run: PYTHONPATH=src python examples/serve_lm.py [--arch rwkv6-3b]
+(any of the 10 assigned architectures works; SSM/RWKV families serve from
+constant-size state instead of a KV cache — same API.)
+"""
+
+import argparse
+
+from repro.launch import serve as serve_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    args = ap.parse_args()
+    serve_cli.main(["--arch", args.arch, "--smoke", "--requests", "8",
+                    "--batch", "4", "--max-new", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Whisper-style encoder-decoder serving: encode stubbed frame embeddings
+once, prefill cross-attention K/V, then batched greedy decode.
+
+Covers the enc-dec serving path (the other families use examples/serve_lm.py).
+
+Run: PYTHONPATH=src python examples/whisper_asr.py [--max-new 12]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import encdec, lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("whisper-small").replace(dtype="float32")
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.model_init(key, cfg)
+
+    # stubbed audio frontend output: (B, frames, d) embeddings
+    frames = jax.random.normal(key, (args.batch, cfg.encoder_len, cfg.d_model))
+
+    t0 = time.time()
+    memory = encdec.encode(params, frames, cfg)
+    cache = lm.init_cache(cfg, args.batch, args.max_new + 8)
+    cache = encdec.prefill_cross(params, memory, cache, cfg)
+    t_prefill = time.time() - t0
+
+    serve = jax.jit(lm.make_serve_step(cfg))
+    tok = jnp.zeros((args.batch, 1), jnp.int32)      # BOS
+    out = []
+    t0 = time.time()
+    for t in range(args.max_new):
+        tok, cache = serve(params, cache, tok, jnp.asarray(t))
+        out.append(np.asarray(tok[:, 0]))
+    t_decode = time.time() - t0
+
+    out = np.stack(out, 1)
+    print(f"encoded {args.batch}x{cfg.encoder_len} frames in {t_prefill:.2f}s; "
+          f"decoded {args.batch}x{args.max_new} tokens in {t_decode:.2f}s")
+    for i in range(min(args.batch, 3)):
+        print(f"  seq{i}: {out[i].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro — TaiBai (topology-aware, fully-programmable brain-inspired processor)
+reproduced as a production-grade JAX training/serving framework for TPU pods.
+
+Layers:
+  core/      the paper's contribution: programmable neuron DSL, 2-level
+             topology tables, event-driven INTEG/FIRE engine, plasticity,
+             mapping compiler, behavioural cost simulator.
+  models/    LM substrate for the 10 assigned architectures.
+  kernels/   Pallas TPU kernels (linrec/lif/spikemm/attention).
+  sharding/  DP/TP/EP/SP/FSDP rules over the production mesh.
+  launch/    mesh construction, multi-pod dry-run, train/serve drivers.
+  roofline/  compiled-artifact roofline analysis.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,57 @@
+"""configs — one module per assigned architecture (+ the paper's SNNs).
+
+Every architecture is selectable by id (``--arch <id>``); `get_config`
+returns the exact published configuration, `get_smoke_config` the reduced
+same-family variant used by CPU smoke tests. `cell_applicable` encodes the
+assignment's skip rules (long_500k needs sub-quadratic attention; encoder-
+only models have no decode step).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Optional, Tuple
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig, smoke_config
+
+ARCH_IDS = [
+    "zamba2-1.2b", "rwkv6-3b", "olmoe-1b-7b", "phi3.5-moe-42b-a6.6b",
+    "whisper-small", "deepseek-7b", "minicpm-2b", "qwen2-1.5b",
+    "llama3.2-3b", "pixtral-12b",
+]
+
+_MODULE_OF = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+              for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULE_OF:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULE_OF[arch]).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return smoke_config(get_config(arch))
+
+
+def cell_applicable(arch: str, shape: str) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) for one (arch x shape) cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    if sh.name == "long_500k":
+        if cfg.family in ("ssm", "hybrid", "rwkv"):
+            return True, ""
+        return False, ("long_500k needs sub-quadratic attention; "
+                       f"{arch} is full-attention ({cfg.family})")
+    if sh.mode == "decode" and cfg.family == "encdec" and cfg.n_layers == 0:
+        return False, "encoder-only: no decode step"      # none assigned
+    return True, ""
+
+
+def shape_adapted_config(arch: str, shape: str) -> ModelConfig:
+    """Per-cell config adaptation (recorded in DESIGN.md §6): zamba2's shared
+    attention blocks switch to sliding-window at 500k context."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and cfg.family == "hybrid":
+        cfg = cfg.replace(sliding_window=4096)
+    return cfg

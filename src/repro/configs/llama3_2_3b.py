@@ -1,0 +1,13 @@
+"""llama3.2-3b — small llama3 (hf:meta-llama/Llama-3.2-1B-class;
+unverified). 28L d_model=3072 24H(kv=8) d_ff=8192 vocab=128256."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b", family="dense",
+        n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8,
+        d_ff=8192, vocab_size=128256,
+        rope_theta=500000.0, tie_embeddings=True,
+    )

@@ -1,0 +1,16 @@
+"""minicpm-2b — llama-like dense with WSD schedule + depth-scaled
+residuals (arXiv:2404.06395; hf). 40L d_model=2304 36H(kv=36) d_ff=5760
+vocab=122753. residual_scale = scale_depth/sqrt(L) = 1.4/sqrt(40)."""
+
+import math
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-2b", family="dense",
+        n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+        d_ff=5760, vocab_size=122753,
+        residual_scale=1.4 / math.sqrt(40), tie_embeddings=True,
+    )

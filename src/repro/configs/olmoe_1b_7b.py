@@ -1,0 +1,15 @@
+"""olmoe-1b-7b — 64 experts, top-8 (arXiv:2409.02060; hf).
+16L d_model=2048 16H(kv=16) d_ff=1024/expert vocab=50304."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b", family="moe",
+        n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=1024, vocab_size=50304,
+        n_experts=64, top_k=8, capacity_factor=1.25,
+        remat="dots_saveable",   # perf iter olmoe-3: -11% memory term
+        moe_group=256,           # perf iter olmoe-5: -7% compute term
+    )

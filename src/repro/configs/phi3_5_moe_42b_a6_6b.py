@@ -1,0 +1,15 @@
+"""phi3.5-moe-42b (6.6b active) — 16 experts top-2
+(hf:microsoft/Phi-3.5-MoE-instruct). 32L d_model=4096 32H(kv=8) d_ff=6400
+vocab=32064. FSDP on: 42B params exceed TP-16's per-chip HBM."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3.5-moe-42b-a6.6b", family="moe",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=6400, vocab_size=32064,
+        n_experts=16, top_k=2, capacity_factor=1.25,
+        fsdp=True, remat="dots_saveable", moe_group=256,
+    )

@@ -1,0 +1,15 @@
+"""pixtral-12b — pixtral-ViT + mistral-nemo decoder backbone
+(hf:mistralai/Pixtral-12B-2409; unverified). 40L d_model=5120 32H(kv=8)
+head_dim=128 d_ff=14336 vocab=131072. The ViT patch frontend is a STUB:
+input_specs() provides precomputed (B, n_patches, d) patch embeddings."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b", family="vlm",
+        n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+        d_ff=14336, vocab_size=131072, head_dim=128,
+        n_patches=1024, rope_theta=1e9, fsdp=True,
+    )

@@ -1,0 +1,23 @@
+"""rwkv6-3b "Finch" — attention-free, data-dependent decay
+(arXiv:2404.05892; hf). 32L d_model=2560 d_ff=8960 vocab=65536.
+
+The wkv6 recurrence is the paper's DIFF primitive with per-token per-channel
+decay — runs on the linrec kernel (DESIGN.md §2)."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b", family="rwkv",
+        n_layers=32, d_model=2560, n_heads=40, n_kv_heads=40,
+        d_ff=8960, vocab_size=65536,
+        rwkv_head_dim=64, decay_lora=64, tshift_lora=32, ssm_chunk=256,
+        # Perf iters rwkv-4..6 (EXPERIMENTS.md §Perf): rwkv6's five distinct
+        # ddlerp projection inputs make TP all-gather-heavy, so train/prefill
+        # run PURE data-parallel with ZeRO-3 params (X: 13.5s -> 0.69s);
+        # decode keeps TP automatically. dots_saveable remat: M -14%.
+        # (rwkv_pad_heads=48 was the TP-alignment fix, superseded by pure_dp;
+        # the feature remains available/tested for TP deployments.)
+        pure_dp=True, remat="dots_saveable",
+    )

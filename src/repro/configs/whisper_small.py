@@ -1,0 +1,19 @@
+"""whisper-small — encoder-decoder ASR backbone
+(arXiv:2212.04356; unverified). 12L(+12L enc) d_model=768 12H(kv=12)
+d_ff=3072 vocab=51865. Conv/log-mel frontend is a STUB: input_specs()
+provides precomputed (B, 1500, d) frame embeddings per the assignment."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small", family="encdec",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+        d_ff=3072, vocab_size=51865,
+        encoder_layers=12, encoder_len=1500,
+        act="gelu", learned_pos=True, tie_embeddings=True,
+        # whisper's native decoder ctx is 448; the assignment's decode_32k
+        # cell dictates 32k cache slots, so positions extend to 32k.
+        max_position=32768,
+    )

@@ -1,0 +1,23 @@
+"""zamba2-1.2b — hybrid Mamba2 backbone + ONE shared attention block
+applied every 6 layers (arXiv:2411.15242; hf). 38L d_model=2048 32H(kv=32)
+d_ff=8192 vocab=32000 ssm_state=64.
+
+The shared block consumes concat(hidden, original embedding) (2d -> d
+projection) — weight sharing across depth is zamba2's signature and maps to
+TaiBai's type-3 weight multiplexing (DESIGN.md §6)."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b", family="hybrid",
+        n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+        d_ff=8192, vocab_size=32000,
+        ssm_state=64, ssm_headdim=64, ssm_expand=2, d_conv=4,
+        attn_every=6, ssm_chunk=256,
+        # Perf iters zamba-4/5 (EXPERIMENTS.md §Perf): activation collectives
+        # under TP outweigh ZeRO-3 param gathers for this width -> pure DP
+        # for train/prefill (decode keeps TP); dots_saveable remat.
+        pure_dp=True, remat="dots_saveable",
+    )

@@ -1,0 +1,14 @@
+"""core — TaiBai's primary contribution as composable JAX modules.
+
+The paper's "brain-inspired instruction set" (Table I) becomes a neuron-
+dynamics DSL built on two primitives:
+
+  diff(v, tau, c)   — the DIFF instruction: first-order ODE step v' = tau*v + c
+  locacc(spikes, w) — the LOCACC/FINDIDX pair: event-driven current accumulation
+
+The 2-level fan-in/fan-out topology tables (Fig. 4-8) are `topology.py`;
+the INTEG/FIRE phase machine (Fig. 10) is `events.py`; on-chip learning
+(STDP + accumulated-spike backprop, Fig. 9d-e) is `plasticity.py`; the
+compiler stack (Fig. 12) is `mapping.py`; the behavioural chip simulator
+(§V-B) is `simulator.py`.
+"""

@@ -1,0 +1,119 @@
+"""Event-driven INTEG/FIRE execution engine (paper §IV-A, Fig. 10).
+
+One SNN timestep on TaiBai = an INTEG phase (spike events drive current
+accumulation at their destination cores; silent cores stay in RECV) followed
+by a FIRE phase (membrane update, spike emission, and — for on-chip learning
+— weight update). On TPU this becomes a `lax.scan` over timesteps where each
+step is integrate -> fire; sparsity is exploited at block granularity by the
+`spikemm` kernel instead of at word granularity by the NoC.
+
+The engine runs a `Program`: an ordered list of `LayerNode`s whose
+connections may be feed-forward, recurrent (previous-timestep spikes), or
+skip (delayed delivery, Fig. 8c — implemented as a ring buffer of spike
+tensors, exactly the chip's 'delayed-fire' neuron type).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neuron import NeuronSpec
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNode:
+    """One population of neurons + its inbound connections.
+
+    integrate: (params, inputs: dict[str, Array]) -> current  (INTEG stage)
+    neuron:    NeuronSpec                                      (FIRE stage)
+    inputs:    names of source nodes ("input" = external spikes); a name
+               suffixed with "@d" is a skip connection delayed by d steps;
+               "self" = recurrent (previous timestep of this node).
+    """
+
+    name: str
+    neuron: NeuronSpec
+    integrate: Callable[[Dict[str, Any], Dict[str, Array]], Array]
+    inputs: Tuple[str, ...] = ("input",)
+    out_dim: int = 0
+
+
+def _parse_src(src: str) -> Tuple[str, int]:
+    if "@" in src:
+        name, d = src.split("@")
+        return name, int(d)
+    return src, 0
+
+
+def init_state(nodes: List[LayerNode], batch: int, dtype=jnp.float32):
+    """Neuron states + skip-delay ring buffers for every node."""
+    state = {}
+    max_delay: Dict[str, int] = {}
+    for n in nodes:
+        for src in n.inputs:
+            name, d = _parse_src(src)
+            if d:
+                max_delay[name] = max(max_delay.get(name, 0), d)
+    for n in nodes:
+        s = n.neuron.init_state((batch, n.out_dim), dtype)
+        s["out"] = jnp.zeros((batch, n.out_dim), dtype)  # last emitted spikes
+        if n.name in max_delay:
+            s["ring"] = jnp.zeros((max_delay[n.name], batch, n.out_dim), dtype)
+        state[n.name] = s
+    return state
+
+
+def step(nodes: List[LayerNode], params: Dict[str, Any], state: Dict[str, Any],
+         x_t: Array) -> Tuple[Dict[str, Any], Array]:
+    """One INTEG+FIRE timestep through all nodes (in order)."""
+    new_state = dict(state)
+    emitted: Dict[str, Array] = {"input": x_t}
+    for n in nodes:
+        feeds = {}
+        for src in n.inputs:
+            name, d = _parse_src(src)
+            if name == "self":
+                feeds[src] = state[n.name]["out"]          # recurrent: t-1
+            elif d:
+                feeds[src] = state[name]["ring"][d - 1]    # delayed-fire
+            elif name in emitted:
+                feeds[src] = emitted[name]                 # same-timestep FF
+            else:
+                feeds[src] = state[name]["out"]            # not yet run: t-1
+        current = n.integrate(params.get(n.name, {}), feeds)   # INTEG
+        ns, s_out = n.neuron.fire(
+            {k: v for k, v in state[n.name].items() if k not in ("out", "ring")},
+            current, params.get(n.name, {}).get("neuron"))      # FIRE
+        ns = dict(ns)
+        ns["out"] = s_out
+        if "ring" in state[n.name]:
+            ring = state[n.name]["ring"]
+            ns["ring"] = jnp.concatenate([s_out[None], ring[:-1]], axis=0)
+        new_state[n.name] = ns
+        emitted[n.name] = s_out
+    return new_state, emitted[nodes[-1].name]
+
+
+def run(nodes: List[LayerNode], params: Dict[str, Any], x: Array,
+        state: Optional[Dict[str, Any]] = None, record: Tuple[str, ...] = ()):
+    """Scan the INTEG/FIRE machine over time.
+
+    x: (T, batch, n_in) input spikes (or floats — TaiBai NCs accept both).
+    Returns (final_state, outputs (T, batch, n_out), recorded dict).
+    """
+    if state is None:
+        state = init_state(nodes, x.shape[1], x.dtype)
+
+    def body(st, x_t):
+        st, out = step(nodes, params, st, x_t)
+        rec = {r: st[r]["out"] for r in record}
+        return st, (out, rec)
+
+    final, (outs, recs) = jax.lax.scan(body, state, x)
+    return final, outs, recs

@@ -1,0 +1,252 @@
+"""Programmable neuron dynamics — the TaiBai instruction set as a JAX DSL.
+
+TaiBai's Table I defines five special instructions; here they are the
+primitives every neuron model is written in:
+
+  diff(v, tau, c)    DIFF    first-order ODE step  v' = tau * v + c
+  locacc(s, w)       LOCACC  current accumulation  I = s @ w   (event-driven)
+  findidx(...)       FINDIDX bitmap-compressed sparse weight lookup
+  spike(...)         SEND    threshold + emit (surrogate gradient in training)
+  (RECV is implicit: a neuron's step function runs when events arrive — on
+   TPU, when its timestep slice is scanned.)
+
+A neuron model is a `NeuronSpec`: `init_state(shape)` plus a `step(state,
+current) -> (state, spikes)` written only in terms of the primitives. The
+INTEG/FIRE split of the chip (§IV-A) maps onto `integrate` (current
+accumulation happens outside, in the layer) and `fire` (this module).
+
+Models provided (all used by the paper's applications, §V-B3):
+  LIF     eqs. (1)-(3)
+  PLIF    LIF with learnable decay (parameterized via sigmoid)
+  ALIF    adaptive threshold (Yin et al. 2021) — ECG SRNN hidden layer
+  DHLIF   multi-branch dendritic LIF (Zheng et al. 2024) — SHD speech task
+  LI      non-spiking leaky-integrator readout (DHSNN/SRNN output layers)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.surrogate import spike
+
+Array = jax.Array
+State = Dict[str, Array]
+
+
+def diff(v: Array, tau, c) -> Array:
+    """The DIFF instruction: one Euler step of dv/dt = -(1-tau) v + input.
+
+    TaiBai accelerates exactly this form (`v = tau*v + c`) in hardware; the
+    Pallas `linrec` kernel is the TPU analogue for time-batched execution.
+    """
+    return tau * v + c
+
+
+def locacc(spikes: Array, weights: Array) -> Array:
+    """The LOCACC instruction: accumulate presynaptic events into currents.
+
+    Dense reference form. The event-gated Pallas kernel (`kernels/spikemm`)
+    is the TPU analogue exploiting spatio-temporal spike sparsity.
+    """
+    return spikes @ weights
+
+
+def findidx(bitmap: Array, packed_weights: Array, axon_id) -> Array:
+    """The FINDIDX instruction: bitmap-based sparse weight lookup.
+
+    `bitmap` is a (n_axons, n_neurons) 0/1 connectivity mask; weights for
+    axon `a` are packed contiguously (CSR-style). FINDIDX computes, for a
+    given axon, the dense weight row by scattering the packed run back to
+    neuron positions — the chip does this with a popcount prefix; we do it
+    with a cumulative-sum prefix (identical semantics).
+    """
+    row = bitmap[axon_id]                       # (n_neurons,) 0/1
+    # position of each neuron's weight inside the packed run for this axon
+    prefix = jnp.cumsum(row) - 1                # index into packed row
+    row_start = jnp.sum(jnp.cumsum(jnp.sum(bitmap, axis=1))[axon_id]) - jnp.sum(bitmap[axon_id])
+    gathered = packed_weights[row_start + prefix]
+    return jnp.where(row > 0, gathered, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Neuron specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NeuronSpec:
+    """Base class: a programmable neuron is (init_state, fire)."""
+
+    surrogate: str = "rectangle"
+    alpha: float = 1.0
+
+    def init_state(self, shape, dtype=jnp.float32) -> State:
+        raise NotImplementedError
+
+    def fire(self, state: State, current: Array, params: Dict[str, Any] | None = None
+             ) -> Tuple[State, Array]:
+        """One FIRE-stage update given the INTEG-stage current."""
+        raise NotImplementedError
+
+    def param_init(self, key, shape) -> Dict[str, Array]:
+        """Learnable per-neuron parameters (empty for fixed models)."""
+        return {}
+
+
+@dataclasses.dataclass(frozen=True)
+class LIF(NeuronSpec):
+    """Leaky integrate-and-fire, paper eqs. (1)-(3). Hard reset to zero."""
+
+    tau: float = 0.9
+    v_th: float = 1.0
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {"v": jnp.zeros(shape, dtype)}
+
+    def fire(self, state, current, params=None):
+        v = diff(state["v"], jnp.asarray(self.tau, current.dtype), current)
+        s = spike(v - self.v_th, self.surrogate, self.alpha)
+        v = v * (1.0 - s)                       # reset-to-zero (eq. 3)
+        return {"v": v}, s
+
+
+@dataclasses.dataclass(frozen=True)
+class PLIF(NeuronSpec):
+    """Parametric LIF: decay is a learnable per-neuron parameter.
+
+    tau = sigmoid(w_tau) keeps the decay in (0, 1); used by PLIF-Net
+    (Table II benchmark).
+    """
+
+    v_th: float = 1.0
+    tau_init: float = 2.0     # sigmoid(2.0) ~= 0.88
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {"v": jnp.zeros(shape, dtype)}
+
+    def param_init(self, key, shape):
+        return {"w_tau": jnp.full(shape[-1:], self.tau_init, jnp.float32)}
+
+    def fire(self, state, current, params=None):
+        tau = jax.nn.sigmoid(params["w_tau"]).astype(current.dtype)
+        v = diff(state["v"], tau, current)
+        s = spike(v - self.v_th, self.surrogate, self.alpha)
+        v = v * (1.0 - s)
+        return {"v": v}, s
+
+
+@dataclasses.dataclass(frozen=True)
+class ALIF(NeuronSpec):
+    """Adaptive-threshold LIF (Yin/Corradi/Bohte 2021), the paper's ECG model.
+
+    Threshold: th(t) = v_th + beta * a(t); a' = rho * a + s. The adaptation
+    variable `a` rises after every emitted spike and decays exponentially —
+    neuronal heterogeneity comes from per-neuron (tau, rho) if trained.
+    """
+
+    tau: float = 0.9
+    rho: float = 0.97        # adaptation decay
+    beta: float = 1.8        # adaptation strength
+    v_th: float = 1.0
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {"v": jnp.zeros(shape, dtype), "a": jnp.zeros(shape, dtype)}
+
+    def param_init(self, key, shape):
+        # heterogeneous time constants: learnable logits around the defaults
+        n = shape[-1]
+        k1, k2 = jax.random.split(key)
+        return {
+            "w_tau": jnp.log(self.tau / (1 - self.tau)) + 0.5 * jax.random.normal(k1, (n,)),
+            "w_rho": jnp.log(self.rho / (1 - self.rho)) + 0.5 * jax.random.normal(k2, (n,)),
+        }
+
+    def fire(self, state, current, params=None):
+        if params:
+            tau = jax.nn.sigmoid(params["w_tau"]).astype(current.dtype)
+            rho = jax.nn.sigmoid(params["w_rho"]).astype(current.dtype)
+        else:
+            tau = jnp.asarray(self.tau, current.dtype)
+            rho = jnp.asarray(self.rho, current.dtype)
+        v = diff(state["v"], tau, current)
+        th = self.v_th + self.beta * state["a"]
+        s = spike(v - th, self.surrogate, self.alpha)
+        v = v * (1.0 - s)
+        a = diff(state["a"], rho, s)            # DIFF drives adaptation too
+        return {"v": v, "a": a}, s
+
+
+@dataclasses.dataclass(frozen=True)
+class DHLIF(NeuronSpec):
+    """Dendritic-heterogeneity LIF (Zheng et al. 2024), the paper's SHD model.
+
+    Each neuron has `n_branches` dendritic compartments with their own decay
+    tau_d; branch currents are integrated separately (this is what forces the
+    fan-in expansion on chip: 4 branches x 700 inputs = 2800 > 2048 fan-in
+    limit, §V-B3) and summed into the soma.
+
+    `fire` expects `current` of shape (..., n_branches, n) — one current per
+    branch — mirroring the chip's PSUM-neuron decomposition.
+    """
+
+    n_branches: int = 4
+    tau: float = 0.9
+    v_th: float = 1.0
+
+    def init_state(self, shape, dtype=jnp.float32):
+        # shape is the soma shape (..., n); branch states add an axis.
+        branch_shape = shape[:-1] + (self.n_branches,) + shape[-1:]
+        return {"v": jnp.zeros(shape, dtype), "d": jnp.zeros(branch_shape, dtype)}
+
+    def param_init(self, key, shape):
+        n = shape[-1]
+        # heterogeneous branch time constants — log-spaced around tau
+        base = jnp.linspace(1.0, 6.0, self.n_branches)[:, None]
+        return {"w_tau_d": jnp.broadcast_to(base, (self.n_branches, n)),
+                "w_tau_s": jnp.full((n,), 2.0)}
+
+    def fire(self, state, current, params=None):
+        tau_d = jax.nn.sigmoid(params["w_tau_d"]).astype(current.dtype)
+        tau_s = jax.nn.sigmoid(params["w_tau_s"]).astype(current.dtype)
+        d = diff(state["d"], tau_d, current)    # per-branch DIFF
+        soma_in = jnp.sum(d, axis=-2)           # dendrites -> soma
+        v = diff(state["v"], tau_s, soma_in)
+        s = spike(v - self.v_th, self.surrogate, self.alpha)
+        v = v * (1.0 - s)
+        return {"v": v, "d": d}, s
+
+
+@dataclasses.dataclass(frozen=True)
+class LI(NeuronSpec):
+    """Non-spiking leaky integrator readout (no fire, no reset).
+
+    The paper's speech output layer is 'a variant of the LIF neuron which
+    does not exhibit spike firing and membrane potential resetting' — the
+    classification is read from the membrane potential.
+    """
+
+    tau: float = 0.95
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {"v": jnp.zeros(shape, dtype)}
+
+    def fire(self, state, current, params=None):
+        v = diff(state["v"], jnp.asarray(self.tau, current.dtype), current)
+        return {"v": v}, v                       # "spikes" = membrane readout
+
+
+NEURON_REGISTRY = {
+    "lif": LIF,
+    "plif": PLIF,
+    "alif": ALIF,
+    "dhlif": DHLIF,
+    "li": LI,
+}
+
+
+def make_neuron(name: str, **kwargs) -> NeuronSpec:
+    return NEURON_REGISTRY[name](**kwargs)

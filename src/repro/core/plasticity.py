@@ -1,0 +1,144 @@
+"""On-chip learning rules (paper §II-A, §IV-B, Fig. 9d-e).
+
+Two families, both 'fully programmable' on TaiBai and both implemented here:
+
+1. STDP — local, event-driven, unsupervised. Pre/post exponential traces
+   (updated with the DIFF primitive) implement the classic pair-based rule:
+   causal pairs potentiate, acausal pairs depress.
+
+2. Accumulated-spike backprop — the paper's on-chip BPTT optimization for
+   the BCI task: instead of storing per-timestep spikes for the backward
+   pass (huge) or bitmap-compressing them (slow to decode), TaiBai
+   *accumulates* spikes over time during the forward pass and uses the
+   accumulated tensor in backward. For a readout stack of the paper's form
+   (FC on spikes, loss on time-summed logits) the gradient w.r.t. the FC
+   weight is EXACTLY dL/dW = delta @ (sum_t s_t)^T, so the approximation is
+   lossless there — we implement it as a custom-VJP layer that saves only
+   sum_t s_t (T x memory saving), and use it for the BCI cross-day
+   fine-tuning exactly as §V-B3 does (32 samples, FC-only update).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neuron import diff
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# STDP
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class STDPConfig:
+    a_plus: float = 0.01        # potentiation amplitude (causal,  dt > 0)
+    a_minus: float = 0.012      # depression amplitude  (acausal, dt < 0)
+    tau_plus: float = 0.9       # pre-trace decay  per timestep
+    tau_minus: float = 0.9      # post-trace decay per timestep
+    w_min: float = -1.0
+    w_max: float = 1.0
+
+
+def stdp_init(n_pre: int, n_post: int, batch: int = 1, dtype=jnp.float32):
+    return {"x_pre": jnp.zeros((batch, n_pre), dtype),
+            "x_post": jnp.zeros((batch, n_post), dtype)}
+
+
+def stdp_step(cfg: STDPConfig, traces: Dict[str, Array], w: Array,
+              s_pre: Array, s_post: Array,
+              use_kernel: bool = False) -> Tuple[Dict[str, Array], Array]:
+    """One event-driven STDP update.
+
+    s_pre: (batch, n_pre) spikes at t;  s_post: (batch, n_post) spikes at t.
+    On a post spike, potentiate by the presynaptic trace (recent causal pres);
+    on a pre spike, depress by the postsynaptic trace (recent acausal posts).
+    All terms are outer products of events with traces — exactly what the
+    chip computes in the FIRE stage, batched here. `use_kernel` routes the
+    weight update through the fused Pallas kernel (kernels/stdp): one
+    HBM->VMEM->HBM pass over the weight tile per step.
+    """
+    x_pre = diff(traces["x_pre"], cfg.tau_plus, s_pre)     # DIFF drives traces
+    x_post = diff(traces["x_post"], cfg.tau_minus, s_post)
+    if use_kernel:
+        from repro.kernels.stdp import stdp_update
+        w = stdp_update(x_pre, s_post, s_pre, x_post, w,
+                        a_plus=cfg.a_plus, a_minus=cfg.a_minus,
+                        w_min=cfg.w_min, w_max=cfg.w_max, force_pallas=True)
+    else:
+        dw_pot = cfg.a_plus * jnp.einsum("bi,bj->ij", x_pre, s_post)
+        dw_dep = cfg.a_minus * jnp.einsum("bi,bj->ij", s_pre, x_post)
+        w = jnp.clip(w + dw_pot - dw_dep, cfg.w_min, cfg.w_max)
+    return {"x_pre": x_pre, "x_post": x_post}, w
+
+
+def stdp_run(cfg: STDPConfig, w: Array, pre_spikes: Array, post_spikes: Array):
+    """Run STDP over a (T, batch, n) spike train pair; returns final weights."""
+    traces = stdp_init(w.shape[0], w.shape[1], pre_spikes.shape[1],
+                       pre_spikes.dtype)
+
+    def body(carry, ts):
+        traces, w = carry
+        s_pre, s_post = ts
+        traces, w = stdp_step(cfg, traces, w, s_pre, s_post)
+        return (traces, w), None
+
+    (traces, w), _ = jax.lax.scan(body, (traces, w), (pre_spikes, post_spikes))
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Accumulated-spike backprop (the paper's on-chip BPTT memory optimization)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def accumulated_spike_fc(spikes_t: Array, w: Array, b: Array) -> Array:
+    """Time-summed FC readout: logits = (sum_t s_t) @ W + T*b.
+
+    Forward is mathematically identical to sum_t (s_t @ W + b); backward
+    stores ONLY the accumulated spikes (not the (T, B, N) history), which is
+    the paper's on-chip learning trick. Input: (T, B, N). Output: (B, M).
+    """
+    acc = jnp.sum(spikes_t, axis=0)
+    return acc @ w + spikes_t.shape[0] * b
+
+
+def _asfc_fwd(spikes_t, w, b):
+    acc = jnp.sum(spikes_t, axis=0)            # <- the only stored activation
+    out = acc @ w + spikes_t.shape[0] * b
+    return out, (acc, w, spikes_t.shape[0])
+
+
+def _asfc_bwd(res, ct):
+    acc, w, T = res
+    d_acc = ct @ w.T                           # (B, N)
+    dw = acc.T @ ct                            # exact: delta (x) sum_t s_t
+    db = T * jnp.sum(ct, axis=0)
+    # upstream sees the gradient spread uniformly over time (the accumulated
+    # approximation of §IV-B: 'accumulated spikes are used instead of
+    # timestep-by-timestep spikes')
+    d_spikes = jnp.broadcast_to(d_acc[None], (T,) + d_acc.shape)
+    return d_spikes, dw, db
+
+
+accumulated_spike_fc.defvjp(_asfc_fwd, _asfc_bwd)
+
+
+def fuse_bn1d_fc(gamma, beta, mean, var, eps, w, b):
+    """BN1d + FC fusion (paper Fig. 9d: 'fused weights'/'fused bias').
+
+    y = ((x - mean)/sqrt(var+eps) * gamma + beta) @ W + b
+      =  x @ W' + b'  with  W' = diag(gamma/std) W,  b' = (beta - mean*gamma/std) @ W + b
+    """
+    std = jnp.sqrt(var + eps)
+    scale = gamma / std
+    w_fused = scale[:, None] * w
+    b_fused = (beta - mean * scale) @ w + b
+    return w_fused, b_fused

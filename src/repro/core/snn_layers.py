@@ -1,0 +1,208 @@
+"""SNN layer library + the paper's three application models (§V-B3).
+
+Models:
+  srnn_ecg   — recurrent ALIF hidden layer + LIF readout (Yin et al. 2021),
+               the ECG/QTDB task. `heterogeneous=False` gives the paper's
+               'TaiBai-homogeneous' ablation (plain LIF everywhere).
+  dhsnn_shd  — 700 -> 64 DH-LIF (4 dendritic branches) -> 20 LI readout
+               (Zheng et al. 2024), the SHD speech task. The 4x700=2800
+               fan-in exceeds TaiBai's 2048 limit, so the chip splits branch
+               currents across PSUM neurons in one core (fan-in expansion);
+               on TPU the same decomposition is the branch axis of the
+               einsum (and, distributed, a TP partial-sum).
+  bci_net    — 16 sub-paths of (linear transform, channel attention,
+               temporal conv), Hadamard-product fusion, concat -> LIF ->
+               fused BN1d+FC readout with accumulated-spike on-chip learning.
+
+All are built on the events.py INTEG/FIRE engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events
+from repro.core.neuron import ALIF, DHLIF, LI, LIF, PLIF, locacc
+from repro.core.plasticity import accumulated_spike_fc, fuse_bn1d_fc
+
+Array = jax.Array
+
+
+def _dense_init(key, n_in, n_out, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(n_in))
+    return {"w": scale * jax.random.normal(key, (n_in, n_out), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# integrate functions (INTEG stage): spikes -> currents
+# ---------------------------------------------------------------------------
+
+
+def ff_integrate(params, feeds):
+    """sum over inbound feeds of  s @ W_feed  (LOCACC)."""
+    cur = 0.0
+    for name, s in feeds.items():
+        key = name.split("@")[0]
+        cur = cur + locacc(s, params[f"w_{key}"])
+    return cur
+
+
+def branch_integrate(params, feeds):
+    """DH-LIF INTEG: input split over dendritic branches.
+
+    w_input: (n_branches, n_in, n_out); current: (batch, n_branches, n_out).
+    On chip each branch is a PSUM neuron (fan-in expansion, Fig. 11).
+    """
+    (src, s), = feeds.items()
+    return jnp.einsum("bi,kio->bko", s, params["w_input"])
+
+
+# ---------------------------------------------------------------------------
+# SRNN for ECG (QTDB)
+# ---------------------------------------------------------------------------
+
+
+def make_srnn_ecg(key, n_in=4, n_hidden=64, n_out=6, heterogeneous=True):
+    """Returns (nodes, params). Input: level-crossing-coded ECG,
+    (T=1301, batch, 4). Output: per-timestep band logits (membrane)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # sigmoid surrogate: ALIF's moving threshold needs a wide grad window
+    # (a rectangle window dead-zones adapted neurons; alpha=4 keeps grads
+    # alive across the threshold excursion range)
+    hidden_neuron = (ALIF(surrogate="sigmoid", alpha=4.0, beta=0.5)
+                     if heterogeneous else LIF(surrogate="sigmoid", alpha=4.0))
+    nodes = [
+        events.LayerNode("hidden", hidden_neuron, ff_integrate,
+                         inputs=("input", "self"), out_dim=n_hidden),
+        events.LayerNode("readout", LI(tau=0.95), ff_integrate,
+                         inputs=("hidden",), out_dim=n_out),
+    ]
+    params = {
+        "hidden": {"w_input": _dense_init(k1, n_in, n_hidden)["w"],
+                   "w_self": 0.1 * jax.random.normal(k2, (n_hidden, n_hidden)),
+                   "neuron": (hidden_neuron.param_init(k3, (n_hidden,))
+                              if heterogeneous else None)},
+        "readout": {"w_hidden": _dense_init(k4, n_hidden, n_out)["w"]},
+    }
+    return nodes, params
+
+
+# ---------------------------------------------------------------------------
+# DHSNN for SHD speech
+# ---------------------------------------------------------------------------
+
+
+def make_dhsnn_shd(key, n_in=700, n_hidden=64, n_out=20, n_branches=4,
+                   dendritic=True):
+    """The paper's speech model. `dendritic=False` = homogeneous ablation."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    if dendritic:
+        hidden = events.LayerNode(
+            "hidden", DHLIF(n_branches=n_branches), branch_integrate,
+            inputs=("input",), out_dim=n_hidden)
+        w_in = (1.0 / jnp.sqrt(n_in)) * jax.random.normal(
+            k1, (n_branches, n_in, n_hidden))
+        hparams = {"w_input": w_in,
+                   "neuron": DHLIF(n_branches=n_branches).param_init(
+                       k2, (n_hidden,))}
+    else:
+        hidden = events.LayerNode("hidden", LIF(), ff_integrate,
+                                  inputs=("input",), out_dim=n_hidden)
+        hparams = {"w_input": _dense_init(k1, n_in, n_hidden)["w"]}
+    nodes = [hidden,
+             events.LayerNode("readout", LI(tau=0.97), ff_integrate,
+                              inputs=("hidden",), out_dim=n_out)]
+    params = {"hidden": hparams,
+              "readout": {"w_hidden": _dense_init(k3, n_hidden, n_out)["w"]}}
+    return nodes, params
+
+
+# ---------------------------------------------------------------------------
+# BCI cross-day decoder (16 sub-paths + on-chip learning)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BCIConfig:
+    n_channels: int = 128       # M1 array channels
+    n_steps: int = 50           # 20 ms windows
+    n_paths: int = 16
+    d_path: int = 32            # per-path feature width
+    kernel_t: int = 5           # temporal conv width
+    n_out: int = 4              # hand-movement classes
+
+
+def bci_init(key, cfg: BCIConfig):
+    keys = jax.random.split(key, 6)
+    C, P, D = cfg.n_channels, cfg.n_paths, cfg.d_path
+    s = 1.0 / jnp.sqrt(C)
+    params = {
+        "lin": s * jax.random.normal(keys[0], (P, C, D)),       # linear transform
+        "attn": s * jax.random.normal(keys[1], (P, C, C)),      # channel attention
+        "tconv": (1.0 / jnp.sqrt(cfg.kernel_t)) *
+                 jax.random.normal(keys[2], (P, cfg.kernel_t, D)),
+        # fused BN1d+FC readout (Fig. 9d): trained as the fused tensors
+        "fc_w": (1.0 / jnp.sqrt(P * D)) *
+                jax.random.normal(keys[3], (P * D, cfg.n_out)),
+        "fc_b": jnp.zeros((cfg.n_out,)),
+    }
+    return params
+
+
+def bci_forward(params, x, cfg: BCIConfig, lif=LIF(tau=0.8)):
+    """x: (batch, n_channels, n_steps) filtered/binned neural signal.
+
+    Sub-path: linear transform (x) channel attention (x) temporal conv,
+    fused by Hadamard product + addition (paper §V-B3); concat across paths
+    -> LIF over time -> accumulated-spike FC readout (on-chip-learnable).
+    Returns logits (batch, n_out) and the spike record (T, batch, P*D).
+    """
+    B, C, T = x.shape
+    # linear transform module: (B, P, T, D)
+    lin = jnp.einsum("bct,pcd->bptd", x, params["lin"])
+    # channel attention: softmax over channels, then project
+    att = jax.nn.softmax(jnp.einsum("bct,pce->bpet", x, params["attn"]), axis=2)
+    att = jnp.einsum("bpet,pcd->bptd", att * x[:, None], params["lin"])
+    # temporal convolution along t (same-padded, depthwise over D)
+    pad = cfg.kernel_t // 2
+    lp = jnp.pad(lin, ((0, 0), (0, 0), (pad, cfg.kernel_t - 1 - pad), (0, 0)))
+    idx = jnp.arange(T)[:, None] + jnp.arange(cfg.kernel_t)[None, :]
+    tconv = jnp.einsum("bptkd,pkd->bptd", lp[:, :, idx], params["tconv"])
+    # Hadamard fusion + addition
+    fused = lin * att + tconv                                   # (B, P, T, D)
+    feat = fused.transpose(2, 0, 1, 3).reshape(T, B, cfg.n_paths * cfg.d_path)
+    # LIF over time
+    state = lif.init_state(feat.shape[1:], feat.dtype)
+
+    def body(st, f_t):
+        st, s = lif.fire(st, f_t)
+        return st, s
+
+    _, spikes = jax.lax.scan(body, state, feat)                 # (T, B, P*D)
+    logits = accumulated_spike_fc(spikes, params["fc_w"], params["fc_b"])
+    return logits, spikes
+
+
+def bci_finetune_fc(params, x_few, y_few, cfg: BCIConfig, lr=0.05, steps=20):
+    """Cross-day on-chip learning (§V-B3): update ONLY the fused FC with
+    accumulated-spike backprop on 32 samples."""
+
+    def loss_fn(fc, x, y):
+        p = dict(params, fc_w=fc["fc_w"], fc_b=fc["fc_b"])
+        logits, _ = bci_forward(p, x, cfg)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    fc = {"fc_w": params["fc_w"], "fc_b": params["fc_b"]}
+
+    def step(fc, _):
+        loss, g = jax.value_and_grad(loss_fn)(fc, x_few, y_few)
+        fc = jax.tree.map(lambda p, gg: p - lr * gg, fc, g)
+        return fc, loss
+
+    fc, losses = jax.lax.scan(step, fc, jnp.arange(steps))
+    return dict(params, **fc), losses

@@ -1,0 +1,77 @@
+"""Surrogate gradients for the non-differentiable fire operation (STBP, §II-A).
+
+The forward pass is an exact Heaviside step (spikes are binary, as on chip);
+the backward pass substitutes a smooth proxy so BPTT can train through the
+fire stage. The paper cites Wu et al. 2018 (STBP) which uses a rectangular
+window; we also provide sigmoid' and arctan' proxies, selectable per neuron —
+"fully programmable" applies to the learning rule too.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_SURROGATES = {}
+
+
+def register(name):
+    def deco(fn):
+        _SURROGATES[name] = fn
+        return fn
+    return deco
+
+
+@register("rectangle")
+def _rectangle_grad(x, alpha):
+    # STBP h1: 1/alpha inside a window of width alpha around the threshold.
+    return (jnp.abs(x) < (alpha / 2.0)).astype(x.dtype) / alpha
+
+
+@register("sigmoid")
+def _sigmoid_grad(x, alpha):
+    s = jax.nn.sigmoid(alpha * x)
+    return alpha * s * (1.0 - s)
+
+
+@register("arctan")
+def _arctan_grad(x, alpha):
+    return alpha / (2.0 * (1.0 + (jnp.pi / 2.0 * alpha * x) ** 2))
+
+
+@register("triangle")
+def _triangle_grad(x, alpha):
+    return jnp.maximum(0.0, 1.0 - jnp.abs(alpha * x)) * alpha
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def spike(v_minus_th, surrogate: str = "rectangle", alpha: float = 1.0):
+    """Heaviside(v - v_th) with a surrogate gradient.
+
+    Args:
+      v_minus_th: membrane potential minus threshold.
+      surrogate: one of {rectangle, sigmoid, arctan, triangle}.
+      alpha: surrogate sharpness.
+    Returns:
+      binary spikes with the dtype of the input.
+    """
+    return (v_minus_th >= 0.0).astype(v_minus_th.dtype)
+
+
+def _spike_fwd(v_minus_th, surrogate, alpha):
+    return spike(v_minus_th, surrogate, alpha), v_minus_th
+
+
+def _spike_bwd(surrogate, alpha, res, ct):
+    v_minus_th = res
+    g = _SURROGATES[surrogate](v_minus_th, jnp.asarray(alpha, v_minus_th.dtype))
+    return (ct * g,)
+
+
+spike.defvjp(_spike_fwd, _spike_bwd)
+
+
+def surrogate_names():
+    return sorted(_SURROGATES)

@@ -1,0 +1,15 @@
+"""data — deterministic synthetic pipelines.
+
+tokens.py   LM token stream: stateless, indexed by (step, shard), so a
+            restarted/rescaled job resumes mid-stream without replaying
+            (fault-tolerance: skip-ahead is O(1)); markov-chain structure so
+            loss actually decreases.
+spikes.py   shape/statistics-faithful generators for the paper's three
+            applications (QTDB ECG, SHD speech, macaque M1 BCI) — the real
+            datasets are not redistributable here; generators are documented
+            against the paper's stated dimensions.
+"""
+
+from repro.data.tokens import TokenStream
+from repro.data.spikes import (gen_ecg_qtdb, gen_shd_spikes, gen_bci_trials,
+                               level_crossing_encode)

@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the compute hot-spots TaiBai optimizes in hardware.
+
+Each kernel is a package with three modules:
+
+  kernel.py — the `pl.pallas_call` body with explicit BlockSpec VMEM tiling
+              (TPU is the target; `interpret=True` executes the same body in
+              Python on CPU for validation)
+  ops.py    — the jit'd public wrapper: padding, block-shape selection,
+              dispatch between the Pallas path (TPU / interpret) and the
+              pure-XLA reference (used by the roofline path)
+  ref.py    — the pure-jnp oracle the tests assert against
+
+Kernels (paper instruction -> TPU adaptation):
+
+  linrec    DIFF     chunked diagonal first-order recurrence y=a*y+x
+                     (serves LIF/ALIF membranes, Mamba2 scans, RWKV6 decay)
+  lif       DIFF+SEND fused integrate-fire over time (threshold/reset is not
+                     associative, so this is its own serial-in-T kernel)
+  spikemm   FINDIDX+LOCACC event-gated block-sparse spike x weight matmul:
+                     silent (all-zero) spike blocks skip the MXU entirely
+  attention —        flash attention (online softmax) for the LM substrate's
+                     prefill path
+  stdp      (FIRE-stage learning) fused trace-outer-product weight update:
+                     one HBM->VMEM->HBM pass over the weight tile per step
+"""

@@ -1,0 +1,26 @@
+"""Oracle: dense softmax attention (single head-batch layout)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (BH, T, d); k, v: (BH, S, d). Returns (BH, T, d)."""
+    T, S = q.shape[1], k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    dpos = jnp.arange(T)[:, None] - jnp.arange(S)[None, :]
+    ok = jnp.ones((T, S), bool)
+    if causal:
+        ok &= dpos >= 0
+    if window > 0:
+        ok &= dpos < window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)

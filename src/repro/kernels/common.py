@@ -1,0 +1,41 @@
+"""Shared kernel utilities: dispatch policy, padding, block sizing."""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.cache
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_mode() -> bool:
+    """Pallas kernels execute in interpret mode off-TPU (CPU container)."""
+    forced = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if forced is not None:
+        return forced == "1"
+    return not on_tpu()
+
+
+def pad_axis(x: jax.Array, axis: int, mult: int, value=0.0):
+    """Pad `axis` of x up to a multiple of `mult`. Returns (padded, orig_len)."""
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def pick_block(n: int, preferred: int, align: int) -> int:
+    """Largest block <= preferred that is a multiple of `align` and covers n
+    evenly after padding; falls back to n rounded up to `align` when small."""
+    if n <= preferred:
+        return max(align, -(-n // align) * align)
+    return preferred

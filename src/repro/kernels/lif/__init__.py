@@ -1,0 +1,4 @@
+from repro.kernels.lif.ops import lif_scan
+from repro.kernels.lif.ref import lif_scan_ref
+
+__all__ = ["lif_scan", "lif_scan_ref"]

@@ -1,0 +1,87 @@
+"""Fused LIF integrate-and-fire Pallas kernel (DIFF + threshold + SEND).
+
+Unlike the pure linear recurrence, LIF's reset makes the scan
+non-associative, so time is processed serially *inside* the kernel — but the
+whole (T_chunk, bb, bn) current block lives in VMEM, so the serial loop is
+VPU-bound with zero HBM traffic per step, and states never round-trip to HBM
+(on chip, this is exactly why TaiBai keeps v in NC-local memory).
+
+grid = (B/bb, N/bn, T/ct), time innermost; VMEM scratch v:(bb, bn) carries
+the membrane across chunks. Default tile (256, 8, 512): current + spikes
+blocks = 8.4 MiB VMEM.
+
+The threshold is a scalar; per-neuron decay arrives as a (1, bn) block so
+heterogeneous populations (ALIF/PLIF-trained taus) use the same kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lif_kernel(cur_ref, tau_ref, v0_ref, s_ref, vT_ref, v_scr, *,
+                ct: int, v_th: float):
+    t_idx = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t_idx == 0)
+    def _():
+        v_scr[...] = v0_ref[...].astype(jnp.float32)
+
+    cur = cur_ref[...].astype(jnp.float32)           # (ct, bb, bn)
+    tau = tau_ref[...].astype(jnp.float32)           # (1, bn)
+    v = v_scr[...]
+
+    def step(t, carry):
+        v, s_acc = carry
+        v = tau * v + cur[t]
+        s = (v >= v_th).astype(jnp.float32)
+        v = v * (1.0 - s)
+        s_acc = jax.lax.dynamic_update_index_in_dim(s_acc, s, t, 0)
+        return v, s_acc
+
+    v, spikes = jax.lax.fori_loop(
+        0, ct, step, (v, jnp.zeros(cur.shape, jnp.float32)))
+    s_ref[...] = spikes.astype(s_ref.dtype)
+    v_scr[...] = v
+
+    @pl.when(t_idx == nt - 1)
+    def _():
+        vT_ref[...] = v.astype(vT_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ct", "bb", "bn", "v_th", "interpret"))
+def lif_pallas(current: jax.Array, tau: jax.Array, v0: jax.Array, *,
+               v_th: float = 1.0, ct: int = 256, bb: int = 8, bn: int = 512,
+               interpret: bool = False):
+    """current: (T, B, N); tau: (N,); v0: (B, N). Dims divisible by tiles."""
+    T, B, N = current.shape
+    assert T % ct == 0 and B % bb == 0 and N % bn == 0
+    grid = (B // bb, N // bn, T // ct)
+    tau2 = tau.reshape(1, N)
+
+    return pl.pallas_call(
+        functools.partial(_lif_kernel, ct=ct, v_th=v_th),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ct, bb, bn), lambda i, j, t: (t, i, j)),  # current
+            pl.BlockSpec((1, bn), lambda i, j, t: (0, j)),          # tau
+            pl.BlockSpec((bb, bn), lambda i, j, t: (i, j)),         # v0
+        ],
+        out_specs=[
+            pl.BlockSpec((ct, bb, bn), lambda i, j, t: (t, i, j)),  # spikes
+            pl.BlockSpec((bb, bn), lambda i, j, t: (i, j)),         # vT
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, B, N), current.dtype),
+            jax.ShapeDtypeStruct((B, N), current.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
+        interpret=interpret,
+    )(current, tau2, v0)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused LIF time scan (paper eqs. (1)-(3))."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lif_scan_ref(current: jax.Array, tau: jax.Array, v0: jax.Array,
+                 v_th: float = 1.0):
+    """current: (T, B, N); tau: (N,) per-neuron decay; v0: (B, N).
+
+    v_t = tau * v_{t-1} + I_t;  s_t = [v_t >= v_th];  v_t <- v_t * (1 - s_t).
+    Returns (spikes (T, B, N), v_final (B, N)). fp32 state.
+    """
+    dt = current.dtype
+    tau32 = tau.astype(jnp.float32)
+
+    def body(v, i_t):
+        v = tau32 * v + i_t.astype(jnp.float32)
+        s = (v >= v_th).astype(jnp.float32)
+        v = v * (1.0 - s)
+        return v, s.astype(dt)
+
+    vT, spikes = jax.lax.scan(body, v0.astype(jnp.float32), current)
+    return spikes, vT.astype(dt)

@@ -1,0 +1,4 @@
+from repro.kernels.linrec.ops import linrec
+from repro.kernels.linrec.ref import linrec_ref, linrec_naive
+
+__all__ = ["linrec", "linrec_ref", "linrec_naive"]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the DIFF recurrence  y_t = a_t * y_{t-1} + x_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linrec_naive(a: jax.Array, x: jax.Array, h0: jax.Array):
+    """lax.scan reference. a, x: (T, ...); h0: (...).
+
+    Returns (y: (T, ...), h_final: (...)). Computation in fp32.
+    """
+    dt = x.dtype
+
+    def body(h, ax):
+        a_t, x_t = ax
+        h = a_t.astype(jnp.float32) * h + x_t.astype(jnp.float32)
+        return h, h
+
+    hT, ys = jax.lax.scan(body, h0.astype(jnp.float32), (a, x))
+    return ys.astype(dt), hT.astype(dt)
+
+
+def linrec_ref(a: jax.Array, x: jax.Array, h0: jax.Array):
+    """associative_scan reference (parallel form, same math).
+
+    Element monoid: (a2, x2) o (a1, x1) = (a1*a2, a2*x1 + x2)  [e1 applied
+    first]. Inclusive scan gives (A_t, X_t) with y_t = X_t + A_t * h0.
+    """
+    dt = x.dtype
+    a32, x32 = a.astype(jnp.float32), x.astype(jnp.float32)
+
+    def combine(e1, e2):
+        a1, x1 = e1
+        a2, x2 = e2
+        return a1 * a2, a2 * x1 + x2
+
+    A, X = jax.lax.associative_scan(combine, (a32, x32), axis=0)
+    y = X + A * h0.astype(jnp.float32)
+    return y.astype(dt), y[-1].astype(dt)

@@ -1,0 +1,4 @@
+from repro.kernels.spikemm.ops import spikemm, block_occupancy
+from repro.kernels.spikemm.ref import spikemm_ref
+
+__all__ = ["spikemm", "block_occupancy", "spikemm_ref"]

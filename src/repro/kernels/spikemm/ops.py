@@ -1,0 +1,73 @@
+"""Public spikemm entry: occupancy computation + dispatch + straight-through
+gradient.
+
+The forward skips silent blocks; the backward uses the dense oracle
+gradients (dL/dW = s^T g gated by the same occupancy is an *exact* identity,
+since silent rows contribute zero — we exploit that: the dW matmul is also
+event-gated, which is the paper's point that learning, too, is event-driven).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_mode, pad_axis
+from repro.kernels.spikemm.kernel import spikemm_pallas
+from repro.kernels.spikemm.ref import spikemm_ref
+
+
+def block_occupancy(spikes: jax.Array, bm: int, bk: int) -> jax.Array:
+    """(M/bm, K/bk) int32: 1 where the spike block has any nonzero."""
+    M, K = spikes.shape
+    blk = spikes.reshape(M // bm, bm, K // bk, bk)
+    return (jnp.max(jnp.abs(blk), axis=(1, 3)) > 0).astype(jnp.int32)
+
+
+def occupancy_fraction(spikes: jax.Array, bm: int = 128, bk: int = 512):
+    """Fraction of blocks with events — the kernel's effective FLOP fraction."""
+    s, _ = pad_axis(spikes, 0, bm)
+    s, _ = pad_axis(s, 1, bk)
+    f = block_occupancy(s, bm, bk)
+    return jnp.mean(f.astype(jnp.float32))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def spikemm(spikes: jax.Array, w: jax.Array, bm: int = 128, bk: int = 512,
+            bn: int = 512, force_pallas: bool = False) -> jax.Array:
+    """Event-gated spikes @ w. spikes: (M, K) 0/1; w: (K, N)."""
+    return _impl(spikes, w, bm, bk, bn, force_pallas)
+
+
+def _impl(spikes, w, bm, bk, bn, force_pallas):
+    if not force_pallas:
+        return spikemm_ref(spikes, w.astype(spikes.dtype))
+    M, K = spikes.shape
+    N = w.shape[1]
+    s_p, _ = pad_axis(spikes, 0, bm)
+    s_p, _ = pad_axis(s_p, 1, bk)
+    w_p, _ = pad_axis(w.astype(spikes.dtype), 0, bk)
+    w_p, _ = pad_axis(w_p, 1, bn)
+    flags = block_occupancy(s_p, bm, bk)
+    out = spikemm_pallas(flags, s_p, w_p, bm=bm, bk=bk, bn=bn,
+                         interpret=interpret_mode())
+    return out[:M, :N]
+
+
+def _fwd(spikes, w, bm, bk, bn, force_pallas):
+    return _impl(spikes, w, bm, bk, bn, force_pallas), (spikes, w)
+
+
+def _bwd(bm, bk, bn, force_pallas, res, g):
+    spikes, w = res
+    # dL/dspikes = g @ w^T (dense: spike cotangents feed the surrogate);
+    # dL/dw = spikes^T @ g — event-gated with the SAME occupancy (exact).
+    g_spikes = jnp.dot(g, w.T.astype(g.dtype),
+                       preferred_element_type=jnp.float32).astype(spikes.dtype)
+    g_w = _impl(spikes.T, g, bm, bk, bn, force_pallas).astype(w.dtype)
+    return g_spikes, g_w
+
+
+spikemm.defvjp(_fwd, _bwd)

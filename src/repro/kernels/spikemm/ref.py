@@ -1,0 +1,17 @@
+"""Oracle for event-driven current accumulation: plain dense matmul.
+
+The event-driven semantics (only firing neurons contribute) is exactly what
+a dense matmul with 0/1 spikes computes; the kernel's value is *skipping*
+the silent blocks, which must not change the result.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spikemm_ref(spikes: jax.Array, w: jax.Array) -> jax.Array:
+    """spikes: (M, K) 0/1 (any float dtype); w: (K, N). fp32 accumulate."""
+    return jnp.dot(spikes, w, preferred_element_type=jnp.float32
+                   ).astype(spikes.dtype)

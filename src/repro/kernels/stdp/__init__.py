@@ -1,0 +1,1 @@
+from repro.kernels.stdp.ops import stdp_update

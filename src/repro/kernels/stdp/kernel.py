@@ -1,0 +1,70 @@
+"""Fused STDP weight-update Pallas kernel (the paper's on-chip learning in
+one pass over the weight tile).
+
+One STDP step over a batch of B parallel synapse-update events:
+
+    dw = a_plus * x_pre^T @ s_post  -  a_minus * s_pre^T @ x_post
+    w' = clip(w + dw, w_min, w_max)
+
+Both outer products are MXU matmuls with the BATCH as the contraction dim;
+the clip and accumulate fuse into the same VMEM tile visit, so the weight
+matrix streams HBM->VMEM->HBM exactly once per step (on chip, this is the
+FIRE-stage weight update touching each synapse once — §III-B).
+
+grid = (N_pre/bm, N_post/bn); B (the contraction) is kept whole per tile —
+STDP batches are small (events of one timestep), so B<=512 fits VMEM:
+tiles at defaults (bm=bn=256, B=256, f32): x_pre 256 KiB, s_post 256 KiB,
+w 256 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stdp_kernel(xpre_ref, spost_ref, spre_ref, xpost_ref, w_ref, out_ref, *,
+                 a_plus: float, a_minus: float, w_min: float, w_max: float):
+    xpre = xpre_ref[...].astype(jnp.float32)      # (B, bm)
+    spost = spost_ref[...].astype(jnp.float32)    # (B, bn)
+    spre = spre_ref[...].astype(jnp.float32)      # (B, bm)
+    xpost = xpost_ref[...].astype(jnp.float32)    # (B, bn)
+    pot = jax.lax.dot_general(xpre, spost, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    dep = jax.lax.dot_general(spre, xpost, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    w = w + a_plus * pot - a_minus * dep
+    out_ref[...] = jnp.clip(w, w_min, w_max).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "a_plus", "a_minus",
+                                             "w_min", "w_max", "interpret"))
+def stdp_pallas(x_pre: jax.Array, s_post: jax.Array, s_pre: jax.Array,
+                x_post: jax.Array, w: jax.Array, *,
+                a_plus: float, a_minus: float, w_min: float, w_max: float,
+                bm: int = 256, bn: int = 256,
+                interpret: bool = False) -> jax.Array:
+    """x_pre/s_pre: (B, N_pre); x_post/s_post: (B, N_post); w: (N_pre, N_post)."""
+    B, M = x_pre.shape
+    N = x_post.shape[1]
+    assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_stdp_kernel, a_plus=a_plus, a_minus=a_minus,
+                          w_min=w_min, w_max=w_max),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, bm), lambda i, j: (0, i)),   # x_pre
+            pl.BlockSpec((B, bn), lambda i, j: (0, j)),   # s_post
+            pl.BlockSpec((B, bm), lambda i, j: (0, i)),   # s_pre
+            pl.BlockSpec((B, bn), lambda i, j: (0, j)),   # x_post
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),  # w
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), w.dtype),
+        interpret=interpret,
+    )(x_pre, s_post, s_pre, x_post, w)

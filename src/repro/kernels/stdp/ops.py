@@ -1,0 +1,37 @@
+"""Public STDP-update entry point: padding + dispatch (Pallas on TPU /
+interpret, einsum reference otherwise). Plugged into core/plasticity via
+`stdp_step(..., use_kernel=True)`."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_mode, pad_axis, pick_block
+from repro.kernels.stdp.kernel import stdp_pallas
+from repro.kernels.stdp.ref import stdp_update_ref
+
+
+def stdp_update(x_pre: jax.Array, s_post: jax.Array, s_pre: jax.Array,
+                x_post: jax.Array, w: jax.Array, *,
+                a_plus: float = 0.01, a_minus: float = 0.012,
+                w_min: float = -1.0, w_max: float = 1.0,
+                force_pallas: bool = False) -> jax.Array:
+    """One STDP weight step. Traces/spikes: (B, N_*); w: (N_pre, N_post)."""
+    if not force_pallas:
+        return stdp_update_ref(x_pre, s_post, s_pre, x_post, w,
+                               a_plus=a_plus, a_minus=a_minus,
+                               w_min=w_min, w_max=w_max)
+    M, N = w.shape
+    bm = pick_block(M, 256, 8)
+    bn = pick_block(N, 256, 128)
+    xpre_p, _ = pad_axis(x_pre, 1, bm)
+    spre_p, _ = pad_axis(s_pre, 1, bm)
+    spost_p, _ = pad_axis(s_post, 1, bn)
+    xpost_p, _ = pad_axis(x_post, 1, bn)
+    w_p, _ = pad_axis(w, 0, bm)
+    w_p, _ = pad_axis(w_p, 1, bn)
+    out = stdp_pallas(xpre_p, spost_p, spre_p, xpost_p, w_p,
+                      a_plus=a_plus, a_minus=a_minus, w_min=w_min,
+                      w_max=w_max, bm=bm, bn=bn, interpret=interpret_mode())
+    return out[:M, :N]

@@ -1,0 +1,17 @@
+"""Oracle for the fused STDP update — the einsum form of
+core/plasticity.stdp_step's weight half."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stdp_update_ref(x_pre, s_post, s_pre, x_post, w, *,
+                    a_plus, a_minus, w_min, w_max):
+    dw_pot = a_plus * jnp.einsum("bi,bj->ij", x_pre.astype(jnp.float32),
+                                 s_post.astype(jnp.float32))
+    dw_dep = a_minus * jnp.einsum("bi,bj->ij", s_pre.astype(jnp.float32),
+                                  x_post.astype(jnp.float32))
+    return jnp.clip(w.astype(jnp.float32) + dw_pot - dw_dep,
+                    w_min, w_max).astype(w.dtype)

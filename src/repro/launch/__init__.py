@@ -1,0 +1,5 @@
+"""launch — mesh construction, multi-pod dry-run, train/serve drivers.
+
+IMPORTANT: this package must stay import-side-effect-free (no jax import at
+package level): `dryrun.py` sets XLA_FLAGS before the first jax import.
+"""

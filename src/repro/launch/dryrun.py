@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh, and record memory/cost/collective analysis.
+
+The two lines above MUST stay first (before any jax-importing import): jax
+locks the device count at first init, and the dry-run needs 512 placeholder
+CPU devices to build the 16x16 and 2x16x16 meshes. Nothing here allocates
+device memory — inputs are ShapeDtypeStruct stand-ins (launch/specs.py) and
+the artifact is the AOT-compiled executable.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k --mesh pod            # single cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out experiments/dryrun               # the full 40-cell sweep
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, cell_applicable, shape_adapted_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as specs_mod
+from repro.models.config import SHAPES
+from repro.roofline.hlo import collective_bytes
+from repro.sharding import rules
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             cfg_override=None) -> dict:
+    """Lower + compile one cell; return the analysis record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules.set_mesh(mesh)
+    try:
+        cfg = cfg_override or shape_adapted_config(arch, shape)
+        mode, inputs, shardings = specs_mod.cell_inputs(cfg, shape, mesh)
+        step = specs_mod.step_fn_for(cfg, mode)
+
+        t0 = time.perf_counter()
+        jitted = jax.jit(step, in_shardings=shardings)
+        lowered = jitted.lower(*inputs)
+        t_lower = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        n_chips = mesh.devices.size
+        record = {
+            "arch": arch, "shape": shape, "mode": mode,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_chips": n_chips,
+            "status": "ok",
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+            "memory": {
+                "argument_size": getattr(mem, "argument_size_in_bytes", 0),
+                "output_size": getattr(mem, "output_size_in_bytes", 0),
+                "temp_size": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_size": getattr(mem, "generated_code_size_in_bytes", 0),
+            },
+            "collectives": coll,
+        }
+        return record
+    finally:
+        rules.set_mesh(None)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        ok, reason = cell_applicable(arch, shape)
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    prev = json.load(f)
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[skip-done] {tag}", flush=True)
+                    continue
+            if not ok:
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "skipped", "reason": reason}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"[skipped ] {tag}: {reason}", flush=True)
+                continue
+            print(f"[compile ] {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp)
+                print(f"[ok      ] {tag}: compile {rec['compile_s']}s, "
+                      f"flops/dev {rec['flops_per_device']:.3e}, "
+                      f"coll {rec['collectives']['total_bytes']:.3e} B",
+                      flush=True)
+            except Exception as e:
+                failures += 1
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()}
+                print(f"[ERROR   ] {tag}: {e}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

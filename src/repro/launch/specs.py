@@ -1,0 +1,155 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+`input_specs(cfg, shape)` returns (abstract inputs, sharding specs) for the
+step function the cell lowers:
+
+  train_4k      train_step(state, batch)
+  prefill_32k   prefill_step(params, batch)
+  decode_32k /
+  long_500k     serve_step(params, cache, tokens, t)
+
+No device memory is allocated — everything is ShapeDtypeStruct, and the
+parameter/optimizer trees come from jax.eval_shape over the real init.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models import lm
+from repro.models.config import ModelConfig, SHAPES
+from repro.sharding import rules
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, SDS]:
+    b = {"tokens": SDS((batch, seq + 1), jnp.int32)}
+    if cfg.family == "encdec":
+        b["frames"] = SDS((batch, cfg.encoder_len, cfg.d_model),
+                          jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        b["patches"] = SDS((batch, cfg.n_patches, cfg.d_model),
+                           jnp.dtype(cfg.dtype))
+    return b
+
+
+def _dp_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("data", 1) * sizes.get("pod", 1)
+
+
+def batch_shardings(batch_tree: Any, mesh) -> Any:
+    def spec(s):
+        full = rules.batch_spec(len(s.shape))
+        ax = full[0]
+        axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        # drop trailing axes until the global batch divides (e.g. 256 on
+        # pure_dp 2x16x16: (pod,data,model) -> (pod,data))
+        while axes and s.shape[0] % _axis_size(mesh, axes) != 0:
+            axes = axes[:-1]
+        lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+        return NamedSharding(mesh,
+                             PartitionSpec(lead, *full[1:len(s.shape)]))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def state_struct(cfg: ModelConfig) -> Any:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: lm.init_train_state(key, cfg))
+
+
+def params_struct(cfg: ModelConfig) -> Any:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: lm.model_init(key, cfg))
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq: int) -> Any:
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, seq, jnp.dtype(cfg.dtype)))
+
+
+def _axis_size(mesh, ax) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(ax, 1)
+
+
+def _ns(mesh, spec_tree, like_tree=None):
+    """NamedShardings; if `like_tree` given, drop specs whose sharded dims
+    don't divide the actual shapes (replicate those dims instead)."""
+    def one(spec, leaf=None):
+        if leaf is not None:
+            fixed = []
+            for dim, ax in enumerate(spec):
+                if ax is not None and \
+                        leaf.shape[dim] % _axis_size(mesh, ax) != 0:
+                    fixed.append(None)
+                else:
+                    fixed.append(ax)
+            spec = PartitionSpec(*fixed)
+        return NamedSharding(mesh, spec)
+    if like_tree is None:
+        return jax.tree.map(one, spec_tree,
+                            is_leaf=lambda x: isinstance(x, PartitionSpec))
+    return jax.tree.map(lambda s, l: one(s, l), spec_tree, like_tree,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def cell_inputs(cfg: ModelConfig, shape_name: str, mesh
+                ) -> Tuple[str, Tuple[Any, ...], Tuple[Any, ...]]:
+    """-> (mode, abstract_inputs, input_shardings) for one cell."""
+    sh = SHAPES[shape_name]
+    # pure-DP applies to throughput modes WHEN the global batch saturates
+    # the device count (otherwise dropping TP idles the model axis: measured
+    # 16x per-device work on prefill_32k, batch 32 < 256 chips). Decode
+    # keeps TP (ZeRO param gathers per emitted token would dominate
+    # latency).
+    rules.set_pure_dp(bool(getattr(cfg, "pure_dp", False))
+                      and sh.mode != "decode"
+                      and sh.global_batch % mesh.devices.size == 0)
+    # per-device batch must divide the data axes; global batches are as
+    # assigned (256 / 32 / 128 / 1). Batch 1 long-decode replicates over data.
+    if sh.mode == "train":
+        state = state_struct(cfg)
+        batch = batch_struct(cfg, sh.global_batch, sh.seq_len)
+        sst = _ns(mesh, rules.state_specs(state, fsdp=cfg.fsdp), state)
+        bst = batch_shardings(batch, mesh)
+        return "train", (state, batch), (sst, bst)
+    if sh.mode == "prefill":
+        params = params_struct(cfg)
+        batch = batch_struct(cfg, sh.global_batch, sh.seq_len)
+        pst = _ns(mesh, rules.param_specs(params, fsdp=cfg.fsdp), params)
+        bst = batch_shardings(batch, mesh)
+        return "prefill", (params, batch), (pst, bst)
+    # decode
+    params = params_struct(cfg)
+    cache = cache_struct(cfg, sh.global_batch, sh.seq_len)
+    toks = SDS((sh.global_batch, 1), jnp.int32)
+    t = SDS((), jnp.int32)
+    pst = _ns(mesh, rules.param_specs(params, fsdp=cfg.fsdp), params)
+    shardable = sh.global_batch % _dp_size(mesh) == 0
+    cst = _ns(mesh, rules.cache_specs(cache, batch_shardable=shardable))
+    tst = (NamedSharding(mesh, rules.batch_spec(2)) if shardable
+           else NamedSharding(mesh, PartitionSpec()))
+    sst = NamedSharding(mesh, PartitionSpec())
+    return "decode", (params, cache, toks, t), (pst, cst, tst, sst)
+
+
+def step_fn_for(cfg: ModelConfig, mode: str, opt_cfg=None):
+    from repro.optim.adamw import AdamWConfig
+    if mode == "train":
+        return lm.make_train_step(cfg, opt_cfg or AdamWConfig())
+    if mode == "prefill":
+        return lm.make_prefill_step(cfg)
+    return lm.make_serve_step(cfg)

@@ -1,0 +1,108 @@
+"""Training driver CLI.
+
+Examples (CPU container — reduced configs):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On a real pod the same entry point takes --mesh pod/multipod and the full
+config; the step function, sharding rules and checkpoint layout are
+identical (the dry-run proves the full-scale lowering).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data.tokens import TokenStream
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedules import cosine_schedule, wsd_schedule
+from repro.sharding import rules
+from repro.train.loop import TrainLoopConfig, train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override width (e.g. ~100M model sizing)")
+    ap.add_argument("--n-layers", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    over = {}
+    if args.d_model:
+        over.update(d_model=args.d_model,
+                    d_ff=int(args.d_model * 8 // 3 // 64 * 64))
+    if args.n_layers:
+        over["n_layers"] = args.n_layers
+    if over:
+        cfg = cfg.replace(**over)
+    cfg = cfg.replace(dtype="float32")     # CPU numerics
+
+    sched = (wsd_schedule(args.lr, args.warmup, args.steps)
+             if args.arch == "minicpm-2b"
+             else cosine_schedule(args.lr, args.warmup, args.steps))
+    opt = AdamWConfig(lr=sched)
+
+    key = jax.random.PRNGKey(args.seed)
+    state = lm.init_train_state(key, cfg)
+    n_params = sum(p.size for p in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.1f}M")
+
+    stream = TokenStream(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    step_fn = jax.jit(lm.make_train_step(
+        cfg, opt, microbatches=args.microbatches,
+        compress=args.compress_grads))
+
+    def batches(step):
+        b = stream.batch_at(step)
+        out = {"tokens": jnp.asarray(b["tokens"])}
+        if cfg.family == "encdec":
+            k = jax.random.fold_in(key, step)
+            out["frames"] = jax.random.normal(
+                k, (args.batch, cfg.encoder_len, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            k = jax.random.fold_in(key, step)
+            out["patches"] = jax.random.normal(
+                k, (args.batch, cfg.n_patches, cfg.d_model), jnp.float32)
+        return out
+
+    def log(step, metrics):
+        print(f"step {step:5d}  loss {metrics['loss']:.4f}  "
+              f"acc {metrics.get('accuracy', 0):.3f}  "
+              f"gnorm {metrics.get('grad_norm', 0):.2f}", flush=True)
+
+    loop_cfg = TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                               ckpt_every=args.ckpt_every, metrics_hook=log,
+                               log_every=10)
+    t0 = time.time()
+    state, report = train_loop(step_fn, state, batches, loop_cfg)
+    dt = time.time() - t0
+    print(f"done: steps {report.start_step}->{report.end_step} in {dt:.1f}s "
+          f"({'restored' if report.restored else 'fresh'}), "
+          f"final loss {report.losses[-1]:.4f}, "
+          f"stragglers {report.stragglers}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

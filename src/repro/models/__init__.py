@@ -1,0 +1,7 @@
+"""models — LM substrate for the assigned architectures.
+
+Families: dense decoder (llama-class), MoE, Mamba2 SSM, RWKV6, hybrid
+(Mamba2 + shared attention), encoder-decoder (whisper), VLM backbone
+(pixtral). All are composed from `blocks.py` + family modules and stacked by
+`transformer.py` with scan-over-layers + configurable remat.
+"""

@@ -1,0 +1,287 @@
+"""GQA attention: dense, blockwise (memory-efficient), and KV-cache decode.
+
+Three execution paths, selected by `cfg.attn_impl` (or 'auto'):
+
+  dense      — materializes (B, H, T, S) scores. Fine for short seq / smoke.
+  blockwise  — FlashAttention-style online softmax as a lax.scan over KV
+               blocks nested in a scan over Q blocks. Memory O(T·d) instead
+               of O(T²); the inner body is rematerialized in backward. This
+               is the XLA reference path used for the roofline; the Pallas
+               `kernels/attention` is the numerically-identical deployment
+               kernel.
+  decode     — one new token against a (B, S, Hkv, hd) KV cache.
+
+Sliding-window masking (zamba2 long-context hybrid blocks) is supported in
+all paths. All paths share one parameter layout, initialized in `attn_init`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import apply_rope, truncated_normal
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig) -> Dict[str, Array]:
+    d, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": truncated_normal(ks[0], (d, H * hd), s),
+        "wk": truncated_normal(ks[1], (d, Hk * hd), s),
+        "wv": truncated_normal(ks[2], (d, Hk * hd), s),
+        "wo": truncated_normal(ks[3], (H * hd, d), (H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:  # qwen2
+        p["bq"] = jnp.zeros((H * hd,))
+        p["bk"] = jnp.zeros((Hk * hd,))
+        p["bv"] = jnp.zeros((Hk * hd,))
+    return p
+
+
+def qkv_project(params, x: Array, cfg: ModelConfig, positions: Array
+                ) -> Tuple[Array, Array, Array]:
+    """x: (B, T, d) -> q (B, T, H, hd), k/v (B, T, Hk, hd), RoPE applied."""
+    B, T, _ = x.shape
+    dt = x.dtype
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, T, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    if not cfg.learned_pos:  # whisper uses learned positions, no RoPE
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos: Array, kv_pos: Array, causal: bool, window: int,
+               kv_valid: Optional[Array] = None) -> Array:
+    """(..., Tq, Tk) additive mask. window>0 limits lookback (sliding)."""
+    d = q_pos[..., :, None] - kv_pos[..., None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok = ok & (d >= 0)
+    if window > 0:
+        ok = ok & (d < window)
+    if kv_valid is not None:
+        ok = ok & kv_valid[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _repeat_kv(k: Array, n_rep: int) -> Array:
+    """(B, S, Hk, hd) -> (B, S, Hk*n_rep, hd) by head repetition (GQA)."""
+    if n_rep == 1:
+        return k
+    B, S, Hk, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, Hk, n_rep, hd)
+                            ).reshape(B, S, Hk * n_rep, hd)
+
+
+# ---------------------------------------------------------------------------
+# dense path
+# ---------------------------------------------------------------------------
+
+
+def dense_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, q_pos: Optional[Array] = None,
+                    kv_pos: Optional[Array] = None) -> Array:
+    """q: (B, T, H, hd); k/v: (B, S, Hk, hd). Returns (B, T, H, hd)."""
+    B, T, H, hd = q.shape
+    S, Hk = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, H // Hk)
+    v = _repeat_kv(v, H // Hk)
+    if q_pos is None:
+        q_pos = jnp.arange(T)
+    if kv_pos is None:
+        kv_pos = jnp.arange(S)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5) + _mask_bias(q_pos, kv_pos, causal, window)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhts,bshd->bthd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# blockwise (memory-efficient / flash-style) path
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x: Array, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0, block_q: int = 512,
+                        block_kv: int = 1024) -> Array:
+    """Online-softmax attention, O(T·d) memory.
+
+    Outer scan over Q blocks; inner scan over KV blocks carries
+    (acc, row_max, row_sum). The inner body is jax.checkpoint'ed so backward
+    recomputes block scores instead of storing the (T, S) probability matrix
+    — the same storage/recompute trade the paper's accumulated-spike
+    learning makes on-chip (§IV-B).
+    """
+    B, T0, H, hd = q.shape
+    Hk = k.shape[2]
+    k = _repeat_kv(k, H // Hk)
+    v = _repeat_kv(v, H // Hk)
+    q, T = _pad_to(q, 1, block_q)
+    k, S = _pad_to(k, 1, block_kv)
+    v, _ = _pad_to(v, 1, block_kv)
+    Tp, Sp = q.shape[1], k.shape[1]
+    nq, nk = Tp // block_q, Sp // block_kv
+    scale = hd ** -0.5
+
+    # (nq, B, block, H, hd) blocks; scan over leading axis
+    qb = q.reshape(B, nq, block_q, H, hd).transpose(1, 0, 2, 3, 4)
+    kb = k.reshape(B, nk, block_kv, H, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, block_kv, H, hd).transpose(1, 0, 2, 3, 4)
+    kv_valid = (jnp.arange(Sp) < S).reshape(nk, 1, block_kv)  # (nk, 1, bkv)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def kv_body(carry, inp, q_i, q_pos):
+        acc, m, l = carry                       # (B,bq,H,hd), (B,H,bq), (B,H,bq)
+        k_j, v_j, valid_j, j = inp
+        kv_pos = j * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bthd,bshd->bhts", q_i, k_j).astype(jnp.float32) * scale
+        s = s + _mask_bias(q_pos, kv_pos, causal, window,
+                           jnp.broadcast_to(valid_j, (1, block_kv)))
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhts,bshd->bthd", p.astype(q_i.dtype), v_j).astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    def q_body(_, inp):
+        q_i, i = inp
+        q_pos = i * block_q + jnp.arange(block_q)
+        acc0 = jnp.zeros((B, block_q, H, hd), jnp.float32)
+        m0 = jnp.full((B, H, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+
+        # causal: skip KV blocks strictly after this Q block's last row.
+        (acc, m, l), _ = jax.lax.scan(
+            functools.partial(kv_body, q_i=q_i, q_pos=q_pos),
+            (acc0, m0, l0), (kb, vb, kv_valid, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        return None, out.astype(q_i.dtype)
+
+    _, ob = jax.lax.scan(q_body, None, (qb, jnp.arange(nq)))
+    out = ob.transpose(1, 0, 2, 3, 4).reshape(B, Tp, H, hd)
+    return out[:, :T0]
+
+
+# ---------------------------------------------------------------------------
+# decode path (one token vs cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, t: Array, *,
+                     window: int = 0) -> Array:
+    """q: (B, 1, H, hd); caches: (B, S, Hk, hd); t: current position (scalar).
+
+    Attends to cache positions < t+1 (the cache holds positions 0..t).
+    """
+    B, _, H, hd = q.shape
+    S, Hk = k_cache.shape[1], k_cache.shape[2]
+    k = _repeat_kv(k_cache, H // Hk)
+    v = _repeat_kv(v_cache, H // Hk)
+    kv_pos = jnp.arange(S)
+    valid = kv_pos <= t
+    if window > 0:
+        valid = valid & (kv_pos > t - window)
+    s = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32) * (hd ** -0.5)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhts,bshd->bthd", p, v)
+
+
+# ---------------------------------------------------------------------------
+# full layer entry points
+# ---------------------------------------------------------------------------
+
+
+def attention_layer(params, x: Array, cfg: ModelConfig, *,
+                    positions: Optional[Array] = None,
+                    causal: bool = True) -> Array:
+    """Self-attention over a full sequence (train / prefill)."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(T)[None, :]
+    q, k, v = qkv_project(params, x, cfg, positions)
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "blockwise" if T > 2048 else "dense"
+    if impl == "blockwise":
+        o = blockwise_attention(q, k, v, causal=causal,
+                                window=cfg.sliding_window,
+                                block_q=cfg.block_q, block_kv=cfg.block_kv)
+    else:
+        o = dense_attention(q, k, v, causal=causal, window=cfg.sliding_window)
+    return o.reshape(B, T, -1) @ params["wo"].astype(x.dtype)
+
+
+def attention_decode_layer(params, x: Array, cache: Dict[str, Array],
+                           t: Array, cfg: ModelConfig
+                           ) -> Tuple[Array, Dict[str, Array]]:
+    """One decode step. x: (B, 1, d); cache: {k,v}: (B, S, Hk, hd)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), t, jnp.int32)
+    q, k_new, v_new = qkv_project(params, x, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), t, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), t, axis=1)
+    o = decode_attention(q, k_cache, v_cache, t, window=cfg.sliding_window)
+    out = o.reshape(B, 1, -1) @ params["wo"].astype(x.dtype)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def cross_attention_layer(params, x: Array, memory_kv: Tuple[Array, Array],
+                          cfg: ModelConfig) -> Array:
+    """Whisper decoder cross-attention against precomputed encoder K/V.
+
+    Long decoder sequences use the blockwise (online-softmax) path: the
+    dense form materializes (B, H, T, S_enc) — measured 316 GB/device temp
+    on the whisper train_4k dry-run cell; blockwise cut the cell to 205 GB
+    (-35%; the rest is encoder attention + remat buffers — EXPERIMENTS.md
+    §Perf, post-hillclimb probes)."""
+    B, T, _ = x.shape
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, T, cfg.n_heads, cfg.hd)
+    k, v = memory_kv
+    if T > 2048:
+        o = blockwise_attention(q, k, v, causal=False,
+                                block_q=cfg.block_q, block_kv=cfg.block_kv)
+    else:
+        o = dense_attention(q, k, v, causal=False)
+    return o.reshape(B, T, -1) @ params["wo"].astype(dt)
+
+
+def cross_kv(params, memory: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Precompute cross-attention K/V from encoder output (B, S, d)."""
+    B, S, _ = memory.shape
+    dt = memory.dtype
+    k = (memory @ params["wk"].astype(dt)).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (memory @ params["wv"].astype(dt)).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    return k, v

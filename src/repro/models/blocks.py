@@ -1,0 +1,154 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings, initialization."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.surrogate import spike
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape).astype(dtype)
+
+
+@jax.custom_vjp
+def f32_boundary(x: Array) -> Array:
+    """Upcast to fp32 whose COTANGENT comes back in the input dtype.
+
+    Plain `x.astype(f32)` makes the backward cotangent fp32, and under TP
+    the activation-gradient all-reduces then move 4 B/elt instead of 2
+    (measured 89% of olmoe's collective bytes — EXPERIMENTS.md §Perf
+    olmoe-iter-4). Numerics: standard mixed-precision practice; the fp32
+    mean/var math INSIDE the norm is unchanged."""
+    return x.astype(jnp.float32)
+
+
+def _f32b_fwd(x):
+    # residual: zero-size carrier of the input dtype (dtypes aren't jax types)
+    return x.astype(jnp.float32), jnp.zeros((0,), x.dtype)
+
+
+def _f32b_bwd(res, ct):
+    return (ct.astype(res.dtype),)
+
+
+f32_boundary.defvjp(_f32b_fwd, _f32b_bwd)
+
+
+def rms_norm(x: Array, w: Array, eps: float) -> Array:
+    dt = x.dtype
+    x = f32_boundary(x)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: Array, w: Array, b: Array, eps: float) -> Array:
+    dt = x.dtype
+    x = f32_boundary(x)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def group_norm(x: Array, w: Array, b: Array, n_groups: int, eps: float) -> Array:
+    """Per-head group norm (RWKV6 wkv output)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, n_groups, d // n_groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = ((x - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (half-split / llama convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., T, H, hd); positions: (..., T) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU) with optional spiking (event-driven) activations
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig) -> Dict[str, Array]:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    if cfg.act == "swiglu":
+        return {"w_gate": truncated_normal(ks[0], (d, f), s_in),
+                "w_up": truncated_normal(ks[1], (d, f), s_in),
+                "w_down": truncated_normal(ks[2], (f, d), s_out)}
+    return {"w_up": truncated_normal(ks[0], (d, f), s_in),
+            "b_up": jnp.zeros((f,)),
+            "w_down": truncated_normal(ks[1], (f, d), s_out),
+            "b_down": jnp.zeros((cfg.d_model,))}
+
+
+def mlp_apply(params, x: Array, cfg: ModelConfig) -> Array:
+    dt = x.dtype
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"].astype(dt)) * (x @ params["w_up"].astype(dt))
+    else:
+        h = jax.nn.gelu(x @ params["w_up"].astype(dt) + params["b_up"].astype(dt))
+    if cfg.spiking_ffn:
+        # TaiBai technique: binarize hidden activations into spike events
+        # (surrogate grad for training); the down projection then runs on the
+        # event-gated spikemm kernel on TPU (block-sparse skip of silent
+        # tiles). Threshold 0.05 sits inside the silu-gated activation
+        # distribution at init (0.5 silences the layer outright — measured);
+        # the sigmoid surrogate keeps gradients alive across the threshold.
+        h = spike(h - 0.05, "sigmoid", 4.0)
+    out = h @ params["w_down"].astype(dt)
+    if cfg.act != "swiglu":
+        out = out + params["b_down"].astype(dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig) -> Dict[str, Array]:
+    v, d = cfg.padded_vocab, cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {"tok": truncated_normal(ks[0], (v, d), 0.02)}
+    if cfg.learned_pos:
+        p["pos"] = truncated_normal(ks[1], (cfg.max_position, d), 0.02)
+    if not cfg.tie_embeddings:
+        p["head"] = truncated_normal(ks[2], (d, v), d ** -0.5)
+    return p
+
+
+def embed_apply(params, tokens: Array, dtype) -> Array:
+    return params["tok"].astype(dtype)[tokens]
+
+
+def lm_head(params, x: Array, cfg: ModelConfig) -> Array:
+    w = params.get("head")
+    if w is None:
+        w = params["tok"].T
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)

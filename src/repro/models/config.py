@@ -1,0 +1,145 @@
+"""Model + shape configuration dataclasses used across the framework."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group: int = 512           # GShard routing-group size (tokens)
+
+    # --- Mamba2 / SSM (zamba2) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    d_conv: int = 4
+    attn_every: int = 0            # hybrid: shared attn block after every N ssm layers
+
+    # --- RWKV6 ---
+    rwkv_head_dim: int = 64
+    rwkv_pad_heads: int = 0        # pad wkv path to this head count (TP align)
+    decay_lora: int = 64           # low-rank width of the data-dependent decay
+    tshift_lora: int = 32          # low-rank width of the ddlerp token shift
+
+    # --- attention details ---
+    qkv_bias: bool = False
+    residual_scale: float = 0.0    # MiniCPM scale_depth/sqrt(L); 0 = 1.0
+    fsdp: bool = False             # ZeRO-3: shard params over `data` too
+    pure_dp: bool = False          # no TP: ZeRO over (pod,data,model) axes
+    rope_theta: float = 10000.0
+    sliding_window: int = 0        # 0 = full causal; set for long-context hybrid
+    norm_eps: float = 1e-5
+    act: str = "swiglu"            # swiglu | gelu
+    tie_embeddings: bool = False
+    learned_pos: bool = False      # whisper-style learned positional embedding
+    max_position: int = 1 << 20
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_len: int = 1500        # stub conv-frontend output frames
+
+    # --- VLM (pixtral) ---
+    n_patches: int = 0             # stub patch-embedding prefix length
+
+    # --- paper technique / execution options ---
+    spiking_ffn: bool = False      # event-driven (spiking) FFN activations
+    use_pallas: bool = False       # deployment kernels vs XLA reference path
+    remat: str = "full"            # none | full | dots_saveable
+    attn_impl: str = "auto"        # dense | blockwise | ring | auto
+    scan_layers: bool = True
+    dtype: str = "bfloat16"
+    block_q: int = 512             # blockwise attention tile sizes
+    block_kv: int = 1024
+    ssm_chunk: int = 128           # mamba2 / rwkv6 chunk length
+
+    # --- derived ---
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, 32)
+
+    @property
+    def d_inner(self) -> int:      # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def rwkv_heads(self) -> int:
+        if self.rwkv_pad_heads:
+            return self.rwkv_pad_heads
+        return self.d_model // self.rwkv_head_dim
+
+    @property
+    def d_wkv(self) -> int:        # padded wkv-path width
+        return self.rwkv_heads * self.rwkv_head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell of the assignment."""
+
+    name: str                      # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    mode: str                      # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    kw = dict(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        d_ff=128, vocab_size=256, head_dim=16,
+        sliding_window=min(cfg.sliding_window, 32) if cfg.sliding_window else 0,
+        max_position=4096,
+    )
+    if cfg.family == "moe":
+        kw.update(n_experts=4, top_k=min(cfg.top_k, 2))
+    if cfg.family in ("ssm", "hybrid"):
+        kw.update(ssm_state=16, ssm_headdim=16, ssm_chunk=8)
+        if cfg.attn_every:
+            kw.update(attn_every=1)
+    if cfg.family == "encdec":
+        kw.update(encoder_layers=2, encoder_len=16)
+    if cfg.family == "vlm":
+        kw.update(n_patches=4)
+    if cfg.family == "rwkv":
+        kw.update(rwkv_head_dim=16, decay_lora=8, tshift_lora=8, ssm_chunk=8)
+        kw.update(n_heads=4, n_kv_heads=4)
+    return cfg.replace(**kw)

@@ -1,0 +1,164 @@
+"""Whisper-style encoder-decoder backbone (the audio frontend is a STUB).
+
+Per the assignment, `input_specs()` provides precomputed frame embeddings
+(B, S_enc, d) in place of the log-mel conv frontend; everything downstream —
+bidirectional encoder, causal decoder with cross-attention, KV-cache decode
+— is real. Whisper uses LayerNorm (with bias), GELU MLPs, learned positional
+embeddings, and tied input/output token embeddings.
+
+Structure:
+  encoder: L_enc x [LN -> self-attn (bidirectional) -> LN -> GELU MLP]
+  decoder: L_dec x [LN -> self-attn (causal) -> LN -> cross-attn -> LN -> MLP]
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attention_decode_layer, attn_init,
+                                    cross_attention_layer, cross_kv,
+                                    dense_attention, qkv_project)
+from repro.models.blocks import layer_norm, mlp_init, mlp_apply, truncated_normal
+from repro.models.config import ModelConfig
+from repro.sharding.rules import constrain
+
+Array = jax.Array
+
+
+def _ln_init(d):
+    return {"w": jnp.ones((d,)), "b": jnp.zeros((d,))}
+
+
+def _enc_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _ln_init(cfg.d_model), "ln2": _ln_init(cfg.d_model),
+            "attn": attn_init(k1, cfg), "mlp": mlp_init(k2, cfg)}
+
+
+def _dec_layer_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": _ln_init(cfg.d_model), "ln2": _ln_init(cfg.d_model),
+            "ln3": _ln_init(cfg.d_model),
+            "attn": attn_init(k1, cfg), "xattn": attn_init(k2, cfg),
+            "mlp": mlp_init(k3, cfg)}
+
+
+def encdec_init(key, cfg: ModelConfig):
+    ke, kd, kt, kp, kq = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": {"tok": truncated_normal(kt, (cfg.padded_vocab, cfg.d_model), 0.02),
+                  "pos_dec": truncated_normal(kp, (cfg.max_position, cfg.d_model), 0.02),
+                  "pos_enc": truncated_normal(kq, (cfg.encoder_len, cfg.d_model), 0.02)},
+        "encoder": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "decoder": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "ln_enc": _ln_init(cfg.d_model),
+        "ln_dec": _ln_init(cfg.d_model),
+    }
+
+
+def _ln(x, p, eps):
+    return layer_norm(x, p["w"], p["b"], eps)
+
+
+def encode(params, frames: Array, cfg: ModelConfig) -> Array:
+    """frames: (B, S_enc, d) stubbed frontend embeddings -> encoder memory."""
+    dt = jnp.dtype(cfg.dtype)
+    S = frames.shape[1]
+    h = frames.astype(dt) + params["embed"]["pos_enc"][:S].astype(dt)
+    h = constrain(h, "data", None, None)
+
+    def body(h, layer_p):
+        x = _ln(h, layer_p["ln1"], cfg.norm_eps)
+        q, k, v = qkv_project(layer_p["attn"], x, cfg,
+                              jnp.arange(x.shape[1])[None])
+        a = dense_attention(q, k, v, causal=False)
+        h = h + a.reshape(*x.shape[:2], -1) @ layer_p["attn"]["wo"].astype(dt)
+        h = h + mlp_apply(layer_p["mlp"], _ln(h, layer_p["ln2"], cfg.norm_eps), cfg)
+        return constrain(h, "data", None, None), None
+
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return _ln(h, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_forward(params, tokens: Array, memory: Array, cfg: ModelConfig
+                   ) -> Array:
+    """Teacher-forced decoder. tokens: (B, T); memory: (B, S_enc, d)."""
+    dt = jnp.dtype(cfg.dtype)
+    B, T = tokens.shape
+    h = params["embed"]["tok"].astype(dt)[tokens] + \
+        params["embed"]["pos_dec"][:T].astype(dt)
+    h = constrain(h, "data", None, None)
+
+    def body(h, layer_p):
+        from repro.models.attention import attention_layer
+        a = attention_layer(layer_p["attn"], _ln(h, layer_p["ln1"], cfg.norm_eps), cfg)
+        h = h + a
+        kv = cross_kv(layer_p["xattn"], memory, cfg)
+        h = h + cross_attention_layer(layer_p["xattn"],
+                                      _ln(h, layer_p["ln2"], cfg.norm_eps),
+                                      kv, cfg)
+        h = h + mlp_apply(layer_p["mlp"], _ln(h, layer_p["ln3"], cfg.norm_eps), cfg)
+        return constrain(h, "data", None, None), None
+
+    h, _ = jax.lax.scan(body, h, params["decoder"])
+    h = _ln(h, params["ln_dec"], cfg.norm_eps)
+    logits = (h @ params["embed"]["tok"].T.astype(dt)).astype(jnp.float32)
+    return constrain(logits, "data", None, "model")
+
+
+def encdec_forward(params, frames: Array, tokens: Array, cfg: ModelConfig
+                   ) -> Array:
+    return decode_forward(params, tokens, encode(params, frames, cfg), cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype):
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+        # cross K/V precomputed once per request at prefill
+        "xk": jnp.zeros((L, batch, cfg.encoder_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "xv": jnp.zeros((L, batch, cfg.encoder_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def prefill_cross(params, memory: Array, cache, cfg: ModelConfig):
+    """Fill the cross-attention K/V for all decoder layers."""
+    def body(_, layer_p):
+        k, v = cross_kv(layer_p["xattn"], memory, cfg)
+        return None, (k, v)
+    _, (xk, xv) = jax.lax.scan(body, None, params["decoder"])
+    return dict(cache, xk=xk.astype(cache["xk"].dtype),
+                xv=xv.astype(cache["xv"].dtype))
+
+
+def decode_step(params, tokens: Array, cache, t: Array, cfg: ModelConfig):
+    """One decoder token against self KV cache + precomputed cross K/V."""
+    dt = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    h = params["embed"]["tok"].astype(dt)[tokens] + \
+        params["embed"]["pos_dec"].astype(dt)[t][None, None]
+
+    def body(h, xs):
+        layer_p, k_row, v_row, xk_row, xv_row = xs
+        x = _ln(h, layer_p["ln1"], cfg.norm_eps)
+        a, row = attention_decode_layer(layer_p["attn"], x,
+                                        {"k": k_row, "v": v_row}, t, cfg)
+        h = h + a
+        h = h + cross_attention_layer(layer_p["xattn"],
+                                      _ln(h, layer_p["ln2"], cfg.norm_eps),
+                                      (xk_row, xv_row), cfg)
+        h = h + mlp_apply(layer_p["mlp"], _ln(h, layer_p["ln3"], cfg.norm_eps), cfg)
+        return h, (row["k"], row["v"])
+
+    h, (k_new, v_new) = jax.lax.scan(
+        body, h, (params["decoder"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    h = _ln(h, params["ln_dec"], cfg.norm_eps)
+    logits = (h @ params["embed"]["tok"].T.astype(dt)).astype(jnp.float32)
+    return logits, dict(cache, k=k_new, v=v_new)

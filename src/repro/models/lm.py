@@ -1,0 +1,192 @@
+"""Top-level LM API: init / forward dispatch, loss, train_step & serve_step.
+
+These are the functions the dry-run lowers, the train loop drives, and the
+roofline analyses — one construction site for every (arch x shape) cell:
+
+  train_step(state, batch)             full fwd+bwd+AdamW over (B, T) tokens
+  prefill_step(params, batch)          full-sequence forward (inference)
+  serve_step(params, cache, tok, t)    one decode token against the cache
+
+Batches:
+  LM:      {"tokens": (B, T+1) int32}                (inputs/labels shifted)
+  whisper: {"frames": (B, S_enc, d), "tokens": (B, T+1)}
+  pixtral: {"patches": (B, n_patches, d), "tokens": (B, T+1)}
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import compress_grads
+from repro.sharding.rules import constrain
+
+Array = jax.Array
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# init / forward
+# ---------------------------------------------------------------------------
+
+
+def model_init(key, cfg: ModelConfig) -> Any:
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_init(key, cfg)
+    return tf_mod.transformer_init(key, cfg)
+
+
+def model_forward(params, batch: Dict[str, Array], cfg: ModelConfig
+                  ) -> Tuple[Array, Dict[str, Array]]:
+    """-> (logits over label positions, aux)."""
+    tokens = batch["tokens"][:, :-1]
+    if cfg.family == "encdec":
+        logits = encdec_mod.encdec_forward(params, batch["frames"], tokens, cfg)
+        return logits, {}
+    if cfg.family == "vlm":
+        logits, aux = tf_mod.transformer_forward(
+            params, tokens, cfg, patch_embeds=batch.get("patches"))
+        # loss only on the text positions (skip the patch prefix)
+        if batch.get("patches") is not None:
+            logits = logits[:, batch["patches"].shape[1]:]
+        return logits, aux
+    return tf_mod.transformer_forward(params, tokens, cfg)
+
+
+def cross_entropy(logits: Array, labels: Array, vocab_size: int
+                  ) -> Tuple[Array, Array]:
+    """Mean NLL over valid labels (label < vocab_size); also accuracy."""
+    logits = logits.astype(jnp.float32)
+    valid = (labels >= 0) & (labels < vocab_size)
+    safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(jnp.where(valid, nll, 0.0)) / denom
+    acc = jnp.sum(jnp.where(valid, jnp.argmax(logits, -1) == safe, False)) / denom
+    return loss, acc
+
+
+def loss_fn(params, batch: Dict[str, Array], cfg: ModelConfig
+            ) -> Tuple[Array, Dict[str, Array]]:
+    logits, aux = model_forward(params, batch, cfg)
+    labels = batch["tokens"][:, 1:]
+    loss, acc = cross_entropy(logits, labels, cfg.vocab_size)
+    metrics = {"loss": loss, "accuracy": acc}
+    total = loss
+    if cfg.family == "moe":
+        total = total + MOE_LB_WEIGHT * aux["lb_loss"] + MOE_Z_WEIGHT * aux["z_loss"]
+        metrics.update(lb_loss=aux["lb_loss"], z_loss=aux["z_loss"])
+    metrics["total_loss"] = total
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def init_train_state(key, cfg: ModelConfig) -> Dict[str, Any]:
+    params = model_init(key, cfg)
+    opt = adamw_init(params)
+    return {"params": params, "mu": opt["mu"], "nu": opt["nu"],
+            "step": opt["step"]}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1, compress: bool = False):
+    """Build the jit-able train step.
+
+    `microbatches > 1` accumulates gradients over sequential micro-batches
+    (within-step slack for straggler mitigation + memory control);
+    `compress` round-trips gradients through int8 before the (data, pod)
+    reduction (optim/compression.py).
+    """
+
+    def grad_one(params, mb):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, mb, cfg)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, Array]
+                   ) -> Tuple[Dict[str, Any], Dict[str, Array]]:
+        params = state["params"]
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                (l, m), g = grad_one(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), ms = jax.lax.scan(acc_body, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+            metrics["loss"] = lsum / microbatches
+        else:
+            (_, metrics), grads = grad_one(params, batch)
+        if compress:
+            key = jax.random.fold_in(jax.random.PRNGKey(0), state["step"])
+            grads = compress_grads(grads, key)
+        new_params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, {"mu": state["mu"], "nu": state["nu"],
+                             "step": state["step"]}, params)
+        metrics.update(opt_metrics)
+        return {"params": new_params, **opt_state}, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# inference steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch: Dict[str, Array]) -> Array:
+        logits, _ = model_forward(params, batch, cfg)
+        return logits[:, -1]                      # next-token logits
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, greedy: bool = True):
+    """One decode token: (params, cache, tokens (B,1), t) -> (next, cache).
+
+    Lowered for the decode_32k / long_500k dry-run cells. Sampling is greedy
+    argmax (deterministic) unless greedy=False (gumbel via fold_in(t))."""
+
+    def serve_step(params, cache, tokens: Array, t: Array):
+        if cfg.family == "encdec":
+            logits, cache = encdec_mod.decode_step(params, tokens, cache, t, cfg)
+        else:
+            logits, cache = tf_mod.decode_step(params, tokens, cache, t, cfg)
+        logits = logits[:, -1].astype(jnp.float32)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            key = jax.random.fold_in(jax.random.PRNGKey(17), t)
+            g = -jnp.log(-jnp.log(
+                jax.random.uniform(key, logits.shape, jnp.float32, 1e-9, 1.0)))
+            nxt = jnp.argmax(logits + g, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], cache
+
+    return serve_step
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        return encdec_mod.init_cache(cfg, batch, seq, dtype)
+    return tf_mod.init_cache(cfg, batch, seq, dtype)

@@ -1,0 +1,240 @@
+"""RWKV6 "Finch" — attention-free time mixing with data-dependent decay.
+
+Per head (hd = head_dim), the wkv6 recurrence over state S: (hd, hd):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          w_t = exp(-exp(decay_t))
+    y_t = (r_t S_t) + (r_t . k_t) * u * v_t      (u = bonus for current token)
+
+This is the paper's DIFF primitive with a *data-dependent* tau — exactly the
+heterogeneous-decay neuron TaiBai programs per-neuron, here programmed
+per-token. The sequence path runs chunked: intra-chunk via MXU matmuls with
+decay-weighted masks, inter-chunk carry via the `linrec` kernel over the
+flattened (hd*hd) state — the same kernel that serves LIF membranes and the
+Mamba2 scan.
+
+Token-shift (ddlerp) uses low-rank data-dependent interpolation between x_t
+and x_{t-1} per RWKV6; the channel-mix FFN uses squared-relu with its own
+token shift.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linrec import linrec
+from repro.models.blocks import group_norm, truncated_normal
+from repro.models.config import ModelConfig
+from repro.sharding.rules import constrain
+
+Array = jax.Array
+
+
+def rwkv_init(key, cfg: ModelConfig) -> Dict[str, Array]:
+    d = cfg.d_model
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    dw = cfg.d_wkv          # head-padded wkv width (= d unless rwkv_pad_heads:
+                            # 40 heads don't divide a 16-way model axis, so
+                            # rwkv6-3b pads the wkv path to 48 heads — perf
+                            # iter rwkv-1, EXPERIMENTS.md §Perf)
+    L, Lt = cfg.decay_lora, cfg.tshift_lora
+    ks = jax.random.split(key, 16)
+    s = d ** -0.5
+    return {
+        # --- time mix (wkv6) ---
+        "mu_x": 0.5 * jnp.ones((5, d)),             # base lerp for r,k,v,w,g
+        "A_tsh": truncated_normal(ks[0], (d, 5 * Lt), s),        # ddlerp lora A
+        "B_tsh": truncated_normal(ks[1], (5, Lt, d), Lt ** -0.5),
+        "wr": truncated_normal(ks[2], (d, dw), s),
+        "wk": truncated_normal(ks[3], (d, dw), s),
+        "wv": truncated_normal(ks[4], (d, dw), s),
+        "wg": truncated_normal(ks[5], (d, dw), s),
+        "wo": truncated_normal(ks[6], (dw, d), dw ** -0.5),
+        "w_base": -6.0 * jnp.ones((dw,)),           # decay base (logit space)
+        "A_dec": truncated_normal(ks[7], (d, L), s),             # decay lora
+        "B_dec": truncated_normal(ks[8], (L, dw), L ** -0.5),
+        "u_bonus": jnp.zeros((H, hd)),
+        "ln_x_w": jnp.ones((dw,)),
+        "ln_x_b": jnp.zeros((dw,)),
+        # --- channel mix ---
+        "mu_ffn": 0.5 * jnp.ones((2, d)),
+        "wk_ffn": truncated_normal(ks[9], (d, cfg.d_ff), s),
+        "wv_ffn": truncated_normal(ks[10], (cfg.d_ff, d), cfg.d_ff ** -0.5),
+        "wr_ffn": truncated_normal(ks[11], (d, d), s),
+    }
+
+
+def _token_shift(x: Array, x_prev: Optional[Array] = None) -> Array:
+    """x_{t-1} along the sequence. x: (B, T, d); x_prev: (B, d) carry."""
+    if x_prev is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = x_prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _ddlerp(params, x: Array, xs: Array) -> Tuple[Array, ...]:
+    """Data-dependent lerp (RWKV6): five mixed tensors for r,k,v,w,g."""
+    dt = x.dtype
+    mu = params["mu_x"].astype(dt)                    # (5, d)
+    base = x[:, :, None] + (xs - x)[:, :, None] * mu  # (B,T,5,d)
+    lora = jnp.tanh(x @ params["A_tsh"].astype(dt))   # (B,T,5*Lt)
+    B, T, _ = x.shape
+    Lt = params["B_tsh"].shape[1]
+    lora = lora.reshape(B, T, 5, Lt)
+    adj = jnp.einsum("btfl,fld->btfd", lora, params["B_tsh"].astype(dt))
+    mixed = base + (xs - x)[:, :, None] * adj
+    return tuple(mixed[:, :, i] for i in range(5))
+
+
+def _decay(params, xw: Array) -> Array:
+    """Data-dependent per-channel log-decay: w = -exp(base + lora(xw)) <= 0."""
+    dt = jnp.float32
+    lora = jnp.tanh(xw.astype(dt) @ params["A_dec"].astype(dt)) @ \
+        params["B_dec"].astype(dt)
+    return -jnp.exp(params["w_base"].astype(dt) + lora)   # log w_t (<= 0)
+
+
+def wkv6_chunked(r: Array, k: Array, v: Array, logw: Array, u: Array,
+                 chunk: int, S0: Optional[Array] = None,
+                 use_kernel: bool = False) -> Tuple[Array, Array]:
+    """Chunked wkv6. r,k,v: (B, T, H, hd); logw: (B, T, H, hd) (<=0);
+    u: (H, hd). Returns (y: (B, T, H, hd), S_T: (B, H, hd, hd)).
+
+    Within a chunk, for t >= s (strict causality: s < t):
+        y_t += r_t . (prod_{u=s+1..t} w_u) * k_s  v_s     [decay-masked MXU]
+        y_t += (r_t . u . k_t) v_t                         [current-token bonus]
+    Chunk-final states carry through the linrec (DIFF) kernel.
+    """
+    B, T, H, hd = r.shape
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    f32 = jnp.float32
+
+    rc = r.reshape(B, nc, chunk, H, hd).astype(f32)
+    kc = k.reshape(B, nc, chunk, H, hd).astype(f32)
+    vc = v.reshape(B, nc, chunk, H, hd).astype(f32)
+    lw = logw.reshape(B, nc, chunk, H, hd).astype(f32)
+
+    cum = jnp.cumsum(lw, axis=2)                      # prod_{u<=t} w_u (log)
+    # RWKV6 applies decay AFTER use: y_t reads S_{t-1}, so the pairwise
+    # decay product for s < t is prod_{u=s+1..t-1} w_u = exp(cum_{t} - lw_t
+    # - cum_s). cum_prev carries the "to t-1" cumulative.
+    cum_prev = cum - lw
+    # guard: exp(-cum) can overflow for long chunks; stabilize per chunk by
+    # shifting with the chunk-min (exact: factors cancel in the product).
+    shift = jnp.min(cum, axis=2, keepdims=True)
+    ri = rc * jnp.exp(cum_prev - shift)               # decay-in weights
+    ki = kc * jnp.exp(shift - cum)                    # decay-out weights
+    scores = jnp.einsum("bclhd,bcshd->bchls", ri, ki)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), -1)   # strict lower
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bchls,bcshd->bclhd", scores, vc)
+    # current-token bonus
+    bonus = jnp.einsum("bclhd,hd,bclhd->bclh", rc, u.astype(f32), kc)
+    y_intra = y_intra + bonus[..., None] * vc
+
+    # per-chunk state contribution: S_chunk = sum_s (prod_{u>s} w_u) k_s^T v_s
+    total = cum[:, :, -1:]                            # (B,nc,1,H,hd)
+    decay_to_end = jnp.exp(total - cum)               # prod_{u>s}
+    states = jnp.einsum("bcshd,bcshe->bchde",
+                        kc * decay_to_end, vc)        # (B,nc,H,hd,hd)
+
+    # inter-chunk DIFF: S_c = diag(chunk_decay) S_{c-1} + states_c
+    chunk_decay = jnp.exp(total[:, :, 0])             # (B,nc,H,hd)
+    a_seq = jnp.broadcast_to(chunk_decay[..., None],
+                             (B, nc, H, hd, hd)).reshape(B, nc, -1).swapaxes(0, 1)
+    x_seq = states.reshape(B, nc, -1).swapaxes(0, 1)
+    S_init = (jnp.zeros((B, H * hd * hd), f32) if S0 is None
+              else S0.reshape(B, -1).astype(f32))
+    carried, S_last = linrec(a_seq, x_seq, S_init, use_kernel)
+    prev = jnp.concatenate([S_init[None], carried[:-1]], 0)
+    prev = prev.swapaxes(0, 1).reshape(B, nc, H, hd, hd)
+
+    # inter-chunk contribution: y_t += (r_t . prod_{u<=t-1} w_u) S_prev
+    y_inter = jnp.einsum("bclhd,bchde->bclhe", rc * jnp.exp(cum_prev), prev)
+
+    y = (y_intra + y_inter).reshape(B, T, H, hd)
+    return y, S_last.reshape(B, H, hd, hd)
+
+
+def rwkv_time_mix(params, x: Array, cfg: ModelConfig, *,
+                  x_prev: Optional[Array] = None,
+                  S0: Optional[Array] = None) -> Tuple[Array, Array, Array]:
+    """Full-sequence time mix. Returns (out, last_x, S_T)."""
+    B, T, d = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    dw = cfg.d_wkv
+    dt = x.dtype
+    # NOTE (perf iter rwkv-2, REFUTED): forcing x replicated here to fuse
+    # the five ddlerp input gathers made X/M ~20% WORSE — XLA's sharding
+    # propagation already places the gathers better than the manual
+    # Megatron-style pattern. Left unconstrained on purpose.
+    xs = _token_shift(x, x_prev)
+    xr, xk, xv, xw, xg = _ddlerp(params, x, xs)
+    r = (xr @ params["wr"].astype(dt)).reshape(B, T, H, hd)
+    k = (xk @ params["wk"].astype(dt)).reshape(B, T, H, hd)
+    v = (xv @ params["wv"].astype(dt)).reshape(B, T, H, hd)
+    g = jax.nn.silu(xg @ params["wg"].astype(dt))
+    logw = _decay(params, xw).reshape(B, T, H, hd)
+    y, S_T = wkv6_chunked(r, k, v, logw, params["u_bonus"],
+                          min(cfg.ssm_chunk, T), S0,
+                          use_kernel=cfg.use_pallas)
+    y = y.reshape(B, T, dw).astype(dt)
+    y = group_norm(y, params["ln_x_w"], params["ln_x_b"], H, 64e-5)
+    return (y * g) @ params["wo"].astype(dt), x[:, -1], S_T
+
+
+def rwkv_channel_mix(params, x: Array, cfg: ModelConfig, *,
+                     x_prev: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Squared-relu channel mix with token shift. Returns (out, last_x)."""
+    dt = x.dtype
+    xs = _token_shift(x, x_prev)
+    mu = params["mu_ffn"].astype(dt)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ params["wk_ffn"].astype(dt)))
+    kv = k @ params["wv_ffn"].astype(dt)
+    return jax.nn.sigmoid(xr @ params["wr_ffn"].astype(dt)) * kv, x[:, -1]
+
+
+def rwkv_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Array]:
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_tmix": jnp.zeros((batch, cfg.d_model), dtype),
+        "x_cmix": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv_decode_layer(params, x: Array, cache: Dict[str, Array],
+                      cfg: ModelConfig) -> Tuple[Array, Dict[str, Array]]:
+    """One-token step for both mixers. x: (B, 1, d)."""
+    B, _, d = x.shape  # note: wkv path runs at cfg.d_wkv (head-padded)
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    dt = x.dtype
+    # --- time mix (serial form: S = diag(w) S + k^T v) ---
+    xs = cache["x_tmix"][:, None]
+    xr, xk, xv, xw, xg = _ddlerp(params, x, xs)
+    r = (xr @ params["wr"].astype(dt)).reshape(B, H, hd).astype(jnp.float32)
+    k = (xk @ params["wk"].astype(dt)).reshape(B, H, hd).astype(jnp.float32)
+    v = (xv @ params["wv"].astype(dt)).reshape(B, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["wg"].astype(dt))[:, 0]
+    w = jnp.exp(_decay(params, xw).reshape(B, H, hd))      # (B,H,hd)
+    u = params["u_bonus"].astype(jnp.float32)
+    S = cache["S"]                                          # (B,H,hd,hd)
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    y = jnp.einsum("bhd,bhde->bhe", r, S + u[None, :, :, None] * kv)
+    S = w[..., None] * S + kv
+    y = y.reshape(B, cfg.d_wkv).astype(dt)
+    y = group_norm(y, params["ln_x_w"], params["ln_x_b"], H, 64e-5)
+    out_t = (y * g) @ params["wo"].astype(dt)
+    return out_t[:, None], dict(cache, S=S, x_tmix=x[:, 0])
+
+
+def rwkv_channel_decode(params, x: Array, cache: Dict[str, Array],
+                        cfg: ModelConfig) -> Tuple[Array, Dict[str, Array]]:
+    out, last = rwkv_channel_mix(params, x, cfg, x_prev=cache["x_cmix"])
+    return out, dict(cache, x_cmix=last)

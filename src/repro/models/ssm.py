@@ -1,0 +1,203 @@
+"""Mamba2 (state-space duality, chunked) — zamba2's backbone layers.
+
+The SSM recurrence per head h with scalar decay a_t = exp(dt_t * A_h):
+
+    S_t = a_t * S_{t-1} + dt_t * (B_t (x) x_t)        S: (headdim, state)
+    y_t = S_t @ C_t + D_h * x_t
+
+is EXACTLY the paper's DIFF primitive (v = tau*v + c) over the flattened
+state — the inter-chunk scan below runs on the `linrec` kernel. Within a
+chunk the recurrence is unrolled into MXU matmuls via the standard SSD
+segment-sum form (stable: all exponentials are of non-positive numbers).
+
+Layer structure (Mamba2, n_groups=1):
+    in_proj -> [z | xBC | dt];  causal depthwise conv1d over xBC;
+    SSD over chunks; gated y * silu(z); RMSNorm; out_proj.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linrec import linrec
+from repro.models.blocks import rms_norm, truncated_normal
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def ssm_init(key, cfg: ModelConfig) -> Dict[str, Array]:
+    """Projections are SEPARATE tensors (not one fused w_in) so each shards
+    cleanly: z/x/dt slice along d_inner/heads (TP over `model`), B/C are
+    small and replicate. The depthwise conv covers only the x stream (B/C
+    streams are convolved separately in reference Mamba2; keeping conv on x
+    alone is the zamba2 configuration)."""
+    d, di, st, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_z": truncated_normal(ks[0], (d, di), d ** -0.5),
+        "w_x": truncated_normal(ks[4], (d, di), d ** -0.5),
+        "w_B": truncated_normal(ks[5], (d, st), d ** -0.5),
+        "w_C": truncated_normal(ks[6], (d, st), d ** -0.5),
+        "w_dt": truncated_normal(ks[2], (d, H), d ** -0.5),
+        "conv_w": truncated_normal(ks[1], (cfg.d_conv, di),
+                                   cfg.d_conv ** -0.5),
+        "conv_b": jnp.zeros((di,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),     # A = -exp(A_log)
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))) )),
+        "D": jnp.ones((H,)),
+        "norm_w": jnp.ones((di,)),
+        "w_out": truncated_normal(ks[3], (di, d), di ** -0.5),
+    }
+
+
+def _segsum(logdecay: Array) -> Array:
+    """(..., L) per-step log decays -> (..., L, L) lower-tri pairwise sums:
+    out[t, s] = sum_{u=s+1..t} logdecay_u  (t >= s), -inf above diagonal."""
+    L = logdecay.shape[-1]
+    cs = jnp.cumsum(logdecay, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # cum_t - cum_s
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array, D: Array,
+                chunk: int, h0: Optional[Array] = None,
+                use_linrec_kernel: bool = False
+                ) -> Tuple[Array, Array]:
+    """Chunked state-space dual form.
+
+    x:  (Bb, T, H, P)    per-head inputs (P = headdim)
+    dt: (Bb, T, H)       discretization step (softplus'd, >0)
+    A:  (H,)             negative decay rates (A < 0)
+    B,C:(Bb, T, N)       input/output projections (N = state, n_groups=1)
+    D:  (H,)             skip
+    h0: (Bb, H, P, N)    initial state or None
+    Returns (y: (Bb, T, H, P), h_final: (Bb, T==last chunk state)).
+    """
+    Bb, T, H, P = x.shape
+    N = B.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(Bb, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(Bb, nc, chunk, H).astype(f32)
+    Bc = B.reshape(Bb, nc, chunk, N).astype(f32)
+    Cc = C.reshape(Bb, nc, chunk, N).astype(f32)
+
+    logdecay = dtc * A.astype(f32)                       # (Bb, nc, L, H) <= 0
+    logdecay = jnp.moveaxis(logdecay, -1, -2)            # (Bb, nc, H, L)
+    Lmat = jnp.exp(_segsum(logdecay))                    # (Bb, nc, H, L, L)
+
+    xdt = xc * dtc[..., None]                            # dt-weighted input
+
+    # ---- intra-chunk (quadratic within chunk, all MXU) --------------------
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)       # (Bb,nc,L,L)
+    y_intra = jnp.einsum("bcls,bchls,bcshp->bclhp",
+                         scores, Lmat, xdt)
+
+    # ---- per-chunk final states ------------------------------------------
+    cum = jnp.cumsum(logdecay, axis=-1)                  # (Bb,nc,H,L)
+    total = cum[..., -1:]                                # (Bb,nc,H,1)
+    decay_to_end = jnp.exp(total - cum)                  # prod_{u>s} a_u  (<=1)
+    states = jnp.einsum("bchs,bcshp,bcsn->bchpn",
+                        decay_to_end, xdt, Bc)           # (Bb,nc,H,P,N)
+
+    # ---- inter-chunk scan: THE DIFF RECURRENCE ----------------------------
+    chunk_decay = jnp.exp(total[..., 0])                 # (Bb,nc,H)
+    a_seq = jnp.repeat(chunk_decay[..., None], P * N, -1
+                       ).reshape(Bb, nc, H * P * N).swapaxes(0, 1)
+    x_seq = states.reshape(Bb, nc, H * P * N).swapaxes(0, 1)
+    h_init = (jnp.zeros((Bb, H * P * N), f32) if h0 is None
+              else h0.reshape(Bb, H * P * N).astype(f32))
+    carried, h_last = linrec(a_seq, x_seq, h_init, use_linrec_kernel)
+    # carried[c] = state AFTER chunk c; we need the state BEFORE chunk c
+    prev = jnp.concatenate([h_init[None], carried[:-1]], 0)
+    prev = prev.swapaxes(0, 1).reshape(Bb, nc, H, P, N)
+
+    # ---- inter-chunk contribution ----------------------------------------
+    in_decay = jnp.exp(cum)                              # prod_{u<=t} (<=1)
+    y_inter = jnp.einsum("bcln,bchl,bchpn->bclhp", Cc, in_decay, prev)
+
+    y = (y_intra + y_inter + xc * D.astype(f32)[None, None, None, :, None])
+    y = y.reshape(Bb, T, H, P).astype(x.dtype)
+    return y, h_last.reshape(Bb, H, P, N).astype(x.dtype)
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array,
+                 state: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Depthwise causal conv1d. xbc: (B, T, Cdim); w: (K, Cdim).
+
+    Returns (out (B, T, Cdim), new_state (B, K-1, Cdim))."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[-1]), xbc.dtype)
+    padded = jnp.concatenate([state, xbc], axis=1)
+    out = sum(padded[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+              for i in range(K))
+    out = jax.nn.silu(out + b.astype(xbc.dtype))
+    return out, padded[:, -(K - 1):] if K > 1 else state
+
+
+def ssm_layer(params, x: Array, cfg: ModelConfig) -> Array:
+    """Full-sequence Mamba2 mixer. x: (B, T, d) -> (B, T, d)."""
+    Bb, T, d = x.shape
+    di, st, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    dt_ = x.dtype
+    z = x @ params["w_z"].astype(dt_)
+    xin = x @ params["w_x"].astype(dt_)
+    B = x @ params["w_B"].astype(dt_)
+    C = x @ params["w_C"].astype(dt_)
+    dt_raw = x @ params["w_dt"].astype(dt_)
+    xs, _ = _causal_conv(xin, params["conv_w"], params["conv_b"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xs.reshape(Bb, T, H, P), dt, A, B, C, params["D"],
+                       min(cfg.ssm_chunk, T))
+    y = y.reshape(Bb, T, di) * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    return y @ params["w_out"].astype(dt_)
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Array]:
+    di, st, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    return {"ssm": jnp.zeros((batch, H, P, st), dtype),
+            "conv": jnp.zeros((batch, cfg.d_conv - 1, di), dtype)}
+
+
+def ssm_decode_layer(params, x: Array, cache: Dict[str, Array],
+                     cfg: ModelConfig) -> Tuple[Array, Dict[str, Array]]:
+    """One-token step. x: (B, 1, d); cache: {ssm, conv}."""
+    Bb = x.shape[0]
+    di, st, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    dt_ = x.dtype
+    z = x @ params["w_z"].astype(dt_)
+    xin = x @ params["w_x"].astype(dt_)
+    B = (x @ params["w_B"].astype(dt_))[:, 0]
+    C = (x @ params["w_C"].astype(dt_))[:, 0]
+    dt_raw = x @ params["w_dt"].astype(dt_)
+    xconv, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"],
+                                     cache["conv"])
+    xs = xconv[:, 0]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B, H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a_t = jnp.exp(dt * A)                                          # (B, H)
+    xh = xs.reshape(Bb, H, P).astype(jnp.float32)
+    S = cache["ssm"].astype(jnp.float32)
+    S = a_t[..., None, None] * S + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, B.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", S, C.astype(jnp.float32))
+    y = y + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bb, 1, di).astype(dt_) * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    return y @ params["w_out"].astype(dt_), {
+        "ssm": S.astype(cache["ssm"].dtype), "conv": conv_state}

@@ -1,0 +1,325 @@
+"""Decoder stack: scan-over-layers, configurable remat, per-family blocks.
+
+Families share one skeleton — embed -> scan(L x block) -> norm -> head —
+with the block body dispatched per family:
+
+  dense / vlm   pre-norm GQA attention + (SwiGLU | GELU) MLP
+  moe           pre-norm GQA attention + top-k MoE FFN (aux losses carried
+                through the scan)
+  rwkv          RWKV6 time mix + channel mix (attention-free)
+  hybrid        Mamba2 mixer every layer; a SHARED attention block (one set
+                of weights, zamba2-style) applied at every `attn_every`-th
+                layer via lax.cond inside the scan — weight sharing across
+                depth is the transformer-scale analogue of TaiBai's type-3
+                convolutional weight multiplexing (one filter, many sites),
+                and is encoded the same way: the shared block's parameters
+                are closure constants of the scan body, stored ONCE.
+
+Scan-over-layers keeps the lowered HLO O(1) in depth (the 40-cell dry-run
+compiles 38-layer models with the same HLO as 2-layer ones); remat policy is
+selectable per config ('none' | 'full' | 'dots_saveable').
+
+Decode paths thread per-layer caches as scan carries; the hybrid's shared-
+attention KV caches are per *application site* (n_layers // attn_every of
+them), indexed by layer position inside the scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (attention_decode_layer, attention_layer,
+                                    attn_init)
+from repro.models.blocks import (embed_apply, embed_init, lm_head, mlp_apply,
+                                 mlp_init, rms_norm, truncated_normal)
+from repro.models.config import ModelConfig
+from repro.sharding.rules import constrain
+
+Array = jax.Array
+P = Any  # params pytree
+
+
+# ---------------------------------------------------------------------------
+# per-family block definitions
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig) -> P:
+    """Parameters of ONE layer (unstacked)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if cfg.family == "rwkv":
+        return {"ln1": jnp.ones((cfg.d_model,)), "ln1b": jnp.zeros((cfg.d_model,)),
+                "ln2": jnp.ones((cfg.d_model,)), "ln2b": jnp.zeros((cfg.d_model,)),
+                "mix": rwkv_mod.rwkv_init(k1, cfg)}
+    if cfg.family in ("ssm", "hybrid"):
+        return {"norm1": jnp.ones((cfg.d_model,)),
+                "mixer": ssm_mod.ssm_init(k1, cfg)}
+    p = {"norm1": jnp.ones((cfg.d_model,)),
+         "norm2": jnp.ones((cfg.d_model,)),
+         "attn": attn_init(k1, cfg)}
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg)
+    return p
+
+
+def _shared_attn_init(key, cfg: ModelConfig) -> P:
+    """zamba2's shared attention+MLP block: consumes concat(h, embed0)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"proj_in": truncated_normal(k1, (2 * d, d), (2 * d) ** -0.5),
+            "norm1": jnp.ones((d,)), "norm2": jnp.ones((d,)),
+            "attn": attn_init(k2, cfg), "mlp": mlp_init(k3, cfg)}
+
+
+def _block_apply(params: P, h: Array, cfg: ModelConfig, aux: Dict[str, Array]
+                 ) -> Tuple[Array, Dict[str, Array]]:
+    """Full-sequence block body (train / prefill)."""
+    if cfg.family == "rwkv":
+        from repro.models.blocks import layer_norm
+        a, _, _ = rwkv_mod.rwkv_time_mix(
+            params["mix"], layer_norm(h, params["ln1"], params["ln1b"],
+                                      cfg.norm_eps), cfg)
+        h = h + a
+        c, _ = rwkv_mod.rwkv_channel_mix(
+            params["mix"], layer_norm(h, params["ln2"], params["ln2b"],
+                                      cfg.norm_eps), cfg)
+        return h + c, aux
+    if cfg.family in ("ssm", "hybrid"):
+        a = ssm_mod.ssm_layer(params["mixer"],
+                              rms_norm(h, params["norm1"], cfg.norm_eps), cfg)
+        return h + a, aux
+    # dense / moe / vlm
+    a = attention_layer(params["attn"],
+                        rms_norm(h, params["norm1"], cfg.norm_eps), cfg)
+    h = h + cfg_residual_scale(cfg) * a
+    x2 = rms_norm(h, params["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m, moe_aux = moe_mod.moe_layer(params["moe"], x2, cfg)
+        aux = {k: aux.get(k, 0.0) + moe_aux[k] for k in ("lb_loss", "z_loss")}
+    else:
+        m = mlp_apply(params["mlp"], x2, cfg)
+    return h + cfg_residual_scale(cfg) * m, aux
+
+
+def cfg_residual_scale(cfg: ModelConfig) -> float:
+    """MiniCPM 'scale_depth': residual branches scaled by s/sqrt(L)."""
+    return cfg.residual_scale if cfg.residual_scale else 1.0
+
+
+def _shared_attn_apply(params: P, h: Array, emb0: Array, cfg: ModelConfig
+                       ) -> Array:
+    x = jnp.concatenate([h, emb0], axis=-1) @ params["proj_in"].astype(h.dtype)
+    a = attention_layer(params["attn"],
+                        rms_norm(x, params["norm1"], cfg.norm_eps), cfg)
+    x = x + a
+    m = mlp_apply(params["mlp"], rms_norm(x, params["norm2"], cfg.norm_eps), cfg)
+    return h + x + m - h  # residual handled inside (x carries h via proj)
+
+
+# ---------------------------------------------------------------------------
+# model init / forward
+# ---------------------------------------------------------------------------
+
+
+def n_shared_attn(cfg: ModelConfig) -> int:
+    return (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every \
+        if cfg.attn_every else 0
+
+
+def transformer_init(key, cfg: ModelConfig) -> P:
+    ke, kl, ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    p = {"embed": embed_init(ke, cfg),
+         "layers": layers,
+         "final_norm": jnp.ones((cfg.d_model,))}
+    if cfg.family == "hybrid" and cfg.attn_every:
+        p["shared_attn"] = _shared_attn_init(ks, cfg)
+    if cfg.family == "vlm" and cfg.n_patches:
+        p["patch_proj"] = truncated_normal(ks, (cfg.d_model, cfg.d_model),
+                                           cfg.d_model ** -0.5)
+    return p
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots_saveable":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            prevent_cse=False)
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+def _run_layers(params: P, h: Array, cfg: ModelConfig, emb0: Optional[Array]
+                ) -> Tuple[Array, Dict[str, Array]]:
+    aux0 = ({"lb_loss": jnp.zeros((), jnp.float32),
+             "z_loss": jnp.zeros((), jnp.float32)}
+            if cfg.family == "moe" else {})
+    shared = params.get("shared_attn")
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_p, idx = xs
+        if shared is not None:
+            h = jax.lax.cond(
+                idx % cfg.attn_every == 0,
+                lambda hh: _shared_attn_apply(shared, hh, emb0, cfg),
+                lambda hh: hh, h)
+        h, aux = _block_apply(layer_p, h, cfg, aux)
+        h = constrain(h, "data", None, None)
+        return (h, aux), None
+
+    body = _remat(body, cfg)
+    idxs = jnp.arange(cfg.n_layers)
+    if cfg.scan_layers:
+        (h, aux), _ = jax.lax.scan(body, (h, aux0), (params["layers"], idxs))
+    else:
+        carry = (h, aux0)
+        for i in range(cfg.n_layers):
+            layer_p = jax.tree.map(lambda x: x[i], params["layers"])
+            carry, _ = body(carry, (layer_p, idxs[i]))
+        h, aux = carry
+    if cfg.family == "moe":
+        aux = {k: v / cfg.n_layers for k, v in aux.items()}
+    return h, aux
+
+
+def transformer_forward(params: P, tokens: Array, cfg: ModelConfig, *,
+                        patch_embeds: Optional[Array] = None
+                        ) -> Tuple[Array, Dict[str, Array]]:
+    """tokens: (B, T) int32 -> logits (B, T', padded_vocab) fp32.
+
+    VLM (pixtral): `patch_embeds` (B, n_patches, d) — the stubbed modality
+    frontend output — is projected and prepended; logits cover the full
+    (patches + text) sequence.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    h = embed_apply(params["embed"], tokens, dt)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pe = patch_embeds.astype(dt) @ params["patch_proj"].astype(dt)
+        h = jnp.concatenate([pe, h], axis=1)
+    h = constrain(h, "data", None, None)
+    emb0 = h if cfg.family == "hybrid" else None
+    h, aux = _run_layers(params, h, cfg, emb0)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params["embed"], h, cfg)
+    return constrain(logits, "data", None, "model"), aux
+
+
+# ---------------------------------------------------------------------------
+# decode (KV / state caches)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype) -> P:
+    L = cfg.n_layers
+    if cfg.family == "rwkv":
+        one = rwkv_mod.rwkv_init_cache(cfg, batch, dtype)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), one)
+    if cfg.family in ("ssm", "hybrid"):
+        one = ssm_mod.ssm_init_cache(cfg, batch, dtype)
+        cache = jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), one)
+        if cfg.family == "hybrid" and cfg.attn_every:
+            A = n_shared_attn(cfg)
+            cache = dict(cache)
+            cache["attn_k"] = jnp.zeros((A, batch, seq, cfg.n_kv_heads, cfg.hd), dtype)
+            cache["attn_v"] = jnp.zeros((A, batch, seq, cfg.n_kv_heads, cfg.hd), dtype)
+        return cache
+    return {"k": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.hd), dtype)}
+
+
+def decode_step(params: P, tokens: Array, cache: P, t: Array,
+                cfg: ModelConfig) -> Tuple[Array, P]:
+    """One token for the whole stack. tokens: (B, 1); t: scalar position.
+
+    Returns (logits (B, 1, vocab), new cache). The layer loop is a scan with
+    the per-layer cache rows as scanned-over/updated ys.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    h = embed_apply(params["embed"], tokens, dt)
+    h = constrain(h, "data", None, None)
+    emb0 = h if cfg.family == "hybrid" else None
+    shared = params.get("shared_attn")
+    idxs = jnp.arange(cfg.n_layers)
+
+    if cfg.family == "hybrid" and cfg.attn_every:
+        attn_kv = {"k": cache["attn_k"], "v": cache["attn_v"]}
+        layer_cache = {k: v for k, v in cache.items()
+                       if k not in ("attn_k", "attn_v")}
+    else:
+        attn_kv = None
+        layer_cache = cache
+
+    def body(carry, xs):
+        h, attn_kv = carry
+        layer_p, cache_row, idx = xs
+        if shared is not None:
+            def do_attn(args):
+                h, kv = args
+                app = idx // cfg.attn_every
+                x = jnp.concatenate([h, emb0], -1) @ layer_shared_proj
+                xn = rms_norm(x, shared["norm1"], cfg.norm_eps)
+                row = {"k": kv["k"][app], "v": kv["v"][app]}
+                a, row = attention_decode_layer(shared["attn"], xn, row, t, cfg)
+                kv = {"k": kv["k"].at[app].set(row["k"]),
+                      "v": kv["v"].at[app].set(row["v"])}
+                x = x + a
+                m = mlp_apply(shared["mlp"],
+                              rms_norm(x, shared["norm2"], cfg.norm_eps), cfg)
+                return h + x + m - h, kv
+
+            layer_shared_proj = shared["proj_in"].astype(h.dtype)
+            h, attn_kv = jax.lax.cond(idx % cfg.attn_every == 0, do_attn,
+                                      lambda a: a, (h, attn_kv))
+        h, new_row = _decode_block(layer_p, h, cache_row, t, cfg)
+        return (h, attn_kv), new_row
+
+    (h, attn_kv), new_cache = jax.lax.scan(
+        body, (h, attn_kv), (params["layers"], layer_cache, idxs))
+    if attn_kv is not None:
+        new_cache = dict(new_cache)
+        new_cache["attn_k"] = attn_kv["k"]
+        new_cache["attn_v"] = attn_kv["v"]
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params["embed"], h, cfg)
+    return logits, new_cache
+
+
+def _decode_block(params: P, h: Array, cache_row: P, t: Array,
+                  cfg: ModelConfig) -> Tuple[Array, P]:
+    if cfg.family == "rwkv":
+        from repro.models.blocks import layer_norm
+        a, row = rwkv_mod.rwkv_decode_layer(
+            params["mix"], layer_norm(h, params["ln1"], params["ln1b"],
+                                      cfg.norm_eps), cache_row, cfg)
+        h = h + a
+        c, row = rwkv_mod.rwkv_channel_decode(
+            params["mix"], layer_norm(h, params["ln2"], params["ln2b"],
+                                      cfg.norm_eps), row, cfg)
+        return h + c, row
+    if cfg.family in ("ssm", "hybrid"):
+        a, row = ssm_mod.ssm_decode_layer(
+            params["mixer"], rms_norm(h, params["norm1"], cfg.norm_eps),
+            cache_row, cfg)
+        return h + a, row
+    a, row = attention_decode_layer(
+        params["attn"], rms_norm(h, params["norm1"], cfg.norm_eps),
+        cache_row, t, cfg)
+    h = h + cfg_residual_scale(cfg) * a
+    x2 = rms_norm(h, params["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m, _ = moe_mod.moe_layer(params["moe"], x2, cfg)
+    else:
+        m = mlp_apply(params["mlp"], x2, cfg)
+    return h + cfg_residual_scale(cfg) * m, row

@@ -1,0 +1,6 @@
+"""optim — AdamW + schedules + gradient transforms (self-contained, no optax)."""
+
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, global_norm)
+from repro.optim.schedules import cosine_schedule, wsd_schedule
+from repro.optim.compression import compress_int8, decompress_int8

@@ -1,0 +1,34 @@
+"""LR schedules: cosine (llama-class) and WSD (MiniCPM's warmup-stable-decay).
+
+MiniCPM (arXiv:2404.06395) trains with WSD: linear warmup -> long stable
+plateau -> short (10%) exponential/linear decay; the assigned minicpm-2b
+config selects `wsd_schedule` to match."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(peak: float, warmup: int, total: int, decay_frac: float = 0.1,
+                 floor: float = 0.01):
+    """Warmup -> Stable -> Decay (exponential tail over the last decay_frac)."""
+    decay_start = int(total * (1.0 - decay_frac))
+
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        decay = peak * (floor ** prog)        # exponential to floor*peak
+        stable = jnp.where(step >= decay_start, decay, peak)
+        return jnp.where(step < warmup, warm, stable)
+    return lr

@@ -1,0 +1,5 @@
+"""roofline — compiled-artifact analysis against TPU v5e-class constants."""
+
+from repro.roofline.hlo import collective_bytes
+from repro.roofline.terms import (HW, RooflineTerms, roofline_from_record,
+                                  model_flops)

@@ -1,0 +1,94 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb diagnostic: compile a shrunk cell and rank its collectives.
+
+  PYTHONPATH=src python -m repro.roofline.diagnose --arch rwkv6-3b \
+      --shape train_4k [--layers 2] [--remat full]
+
+Prints every collective op (bytes x trip count) sorted descending, plus the
+totals per kind — the 'profile' the perf loop reads (DESIGN.md §5: the
+lowered IR is the profile on this container)."""
+
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs import ARCH_IDS, shape_adapted_config
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from repro.roofline.hlo import _COLL_KINDS, _SHAPE_RE, _shape_bytes
+from repro.sharding import rules
+
+
+def rank_collectives(hlo_text: str, top: int = 25):
+    trip_of_comp = {}
+    for line in hlo_text.splitlines():
+        if " while(" in line and "body=" in line:
+            bm = re.search(r"body=\s*%?([\w.\-]+)", line)
+            tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+            if bm:
+                trip_of_comp[bm.group(1)] = int(tm.group(1)) if tm else 1
+    rows = []
+    current = ""
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if m:
+            current = m.group(1)
+        for kind in _COLL_KINDS:
+            if f"{kind}(" in line and "=" in line:
+                head = line.split("=", 1)
+                if kind not in head[1]:
+                    continue
+                res_type = head[1].split(kind)[0]
+                nbytes = _shape_bytes(res_type)
+                if nbytes:
+                    trip = trip_of_comp.get(current, 1)
+                    rows.append((nbytes * trip, trip, kind,
+                                 res_type.strip()[:60], current[:28]))
+                break
+    rows.sort(reverse=True)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=list(SHAPES), required=True)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=False)
+    rules.set_mesh(mesh)
+    cfg = shape_adapted_config(args.arch, args.shape)
+    kw = dict(n_layers=args.layers, scan_layers=False)
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = args.layers
+    if args.remat:
+        kw["remat"] = args.remat
+    cfg = cfg.replace(**kw)
+    mode, inputs, shardings = specs_mod.cell_inputs(cfg, args.shape, mesh)
+    step = specs_mod.step_fn_for(cfg, mode)
+    compiled = jax.jit(step, in_shardings=shardings).lower(*inputs).compile()
+    text = compiled.as_text()
+    rows = rank_collectives(text, args.top)
+    per_kind = defaultdict(float)
+    for b, _, kind, _, _ in rows:
+        per_kind[kind] += b
+    total = sum(per_kind.values())
+    print(f"== {args.arch} {args.shape} L={args.layers} "
+          f"({len(rows)} collectives, {total:.3e} B) ==")
+    for kind, b in sorted(per_kind.items(), key=lambda kv: -kv[1]):
+        print(f"  {kind:20s} {b:.3e} B ({100*b/max(total,1):.1f}%)")
+    print(f"-- top {args.top} ops --")
+    for b, trip, kind, shape, comp in rows[:args.top]:
+        print(f"  {b:.3e} B x{trip:<4d} {kind:18s} {shape:60s} in {comp}")
+
+
+if __name__ == "__main__":
+    main()

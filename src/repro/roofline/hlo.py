@@ -1,0 +1,94 @@
+"""Parse collective traffic out of compiled HLO text.
+
+`cost_analysis()` does not attribute collective bytes, so we sum operand
+sizes over every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the optimized module. Ops inside `while` bodies (from
+lax.scan) execute trip-count times; we multiply by the trip count, which XLA
+publishes in the loop backend_config ("known_trip_count") — scan-over-layers
+would otherwise undercount collectives by ~L x.
+
+Shapes are parsed from the HLO result/operand types, e.g.
+  bf16[2048,4096]{1,0} all-gather(...), replica_groups=...
+The *operand* bytes are what cross the wire for all-reduce/all-to-all/
+permute; for all-gather the wire bytes are (output - shard) ~= output, and
+for reduce-scatter they are ~input; we record input and output bytes per op
+class and use the conventional wire estimate per class.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of one HLO shape or tuple of shapes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum wire bytes per collective kind over the optimized module,
+    weighting ops inside while-loops by their known trip count."""
+    # 1. find trip counts of while loops and which computations they call
+    trip_of_comp: Dict[str, int] = {}
+    for m in re.finditer(
+            r'while\(.*?\).*?body=([%\w.\-]+)(?:.*?known_trip_count.*?"n":"?(\d+))?',
+            hlo_text):
+        comp, trip = m.group(1), m.group(2)
+        trip_of_comp[comp.lstrip("%")] = int(trip) if trip else 1
+    # also match backend_config trip counts appearing after body= on the line
+    for line in hlo_text.splitlines():
+        if " while(" in line and "body=" in line:
+            bm = re.search(r"body=\s*%?([\w.\-]+)", line)
+            tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+            if bm:
+                trip_of_comp[bm.group(1)] = int(tm.group(1)) if tm else \
+                    trip_of_comp.get(bm.group(1), 1)
+
+    # 2. walk computations, tracking which one we're inside
+    out = {k: 0.0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        # computation header: `%name (args) -> type {` (args may nest parens)
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if m:
+            current_comp = m.group(1)
+        for kind in _COLL_KINDS:
+            if f" {kind}(" in line or f"= {kind}(" in line or \
+                    re.search(rf"\b{kind}\b", line) and "=" in line and "(" in line:
+                # result type = text between '=' and the op name
+                head = line.split("=", 1)
+                if len(head) != 2 or kind not in head[1]:
+                    continue
+                res_type = head[1].split(kind)[0]
+                nbytes = _shape_bytes(res_type)
+                if nbytes == 0:
+                    continue
+                trip = trip_of_comp.get(current_comp, 1)
+                out[kind] += nbytes * trip
+                counts[kind] += trip
+                break
+    total = sum(out.values())
+    return {**out, "counts": counts, "total_bytes": total}

@@ -1,0 +1,97 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline driver: per-cell three-term analysis on the single-pod mesh.
+
+  PYTHONPATH=src python -m repro.roofline.run --all --out experiments/roofline
+  PYTHONPATH=src python -m repro.roofline.run --arch rwkv6-3b --shape train_4k
+
+Reads nothing from the dry-run records (it compiles its own depth pairs);
+the dry-run remains the memory-fit + full-schedule proof, this module is the
+FLOP/byte/wire accounting (see compositional.py for why both exist).
+"""
+
+import argparse
+import json
+import traceback
+
+from repro.configs import ARCH_IDS, cell_applicable, shape_adapted_config
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from repro.roofline.compositional import roofline_totals
+from repro.roofline.terms import V5E, model_flops
+
+
+def analyse_cell(arch: str, shape: str, cfg_override=None, mesh=None) -> dict:
+    cfg = cfg_override or shape_adapted_config(arch, shape)
+    totals = roofline_totals(cfg, shape, mesh=mesh)
+    chips = 256
+    flops_dev = totals["flops_per_device"]
+    bytes_dev = totals["bytes_per_device"]
+    wire = totals["wire_bytes"]
+    compute_s = flops_dev / V5E.peak_flops
+    memory_s = bytes_dev / V5E.hbm_bw
+    coll_s = wire / (V5E.ici_bw * V5E.ici_links)
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_dev * chips
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    # roofline fraction: useful model FLOPs per step over what the dominant
+    # term's wall-clock would let peak compute do
+    step_time = max(terms.values())
+    mfu_bound = mf / (chips * V5E.peak_flops * step_time) if step_time else 0.0
+    return {
+        "arch": arch, "shape": shape, "mesh": "16x16", "n_chips": chips,
+        "status": "ok",
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / max(hlo_total, 1.0),
+        "roofline_fraction": mfu_bound,
+        "totals": totals,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args(argv)
+
+    cells = ([(a, s) for a in ARCH_IDS for s in SHAPES] if args.all
+             else [(args.arch, args.shape)])
+    os.makedirs(args.out, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+    for arch, shape in cells:
+        tag = f"{arch}__{shape}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[skip-done] {tag}", flush=True)
+                    continue
+        ok, reason = cell_applicable(arch, shape)
+        if not ok:
+            rec = {"arch": arch, "shape": shape, "status": "skipped",
+                   "reason": reason}
+        else:
+            print(f"[analyse ] {tag} ...", flush=True)
+            try:
+                rec = analyse_cell(arch, shape, mesh=mesh)
+                print(f"[ok      ] {tag}: C {rec['compute_s']*1e3:.1f}ms "
+                      f"M {rec['memory_s']*1e3:.1f}ms "
+                      f"X {rec['collective_s']*1e3:.1f}ms "
+                      f"-> {rec['dominant']}, useful {rec['useful_ratio']:.2f}, "
+                      f"roofline {rec['roofline_fraction']:.2%}", flush=True)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "status": "error",
+                       "error": repr(e), "traceback": traceback.format_exc()}
+                print(f"[ERROR   ] {tag}: {e}", flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""serve — batched KV-cache serving loop."""
+
+from repro.serve.loop import ServeConfig, generate, Request

@@ -1,0 +1,10 @@
+"""sharding — logical-axis partitioning rules over the production mesh.
+
+DP (+pod), TP, EP, FSDP and sequence sharding are expressed as PartitionSpec
+rules keyed on parameter path names; activations are pinned at block
+boundaries with `constrain`. The mapping layer (core/mapping.py) decides
+*which* population goes where; this package says *how* a tensor splits.
+"""
+
+from repro.sharding.rules import (constrain, batch_spec, param_specs,
+                                  set_mesh, get_mesh, state_specs, dp_axes)

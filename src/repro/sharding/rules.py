@@ -1,0 +1,307 @@
+"""Parameter/activation sharding rules (DP / TP / EP / FSDP / SP).
+
+The paper's fan-in expansion (PSUM neurons, Fig. 11) is tensor parallelism:
+a neuron whose fan-in exceeds one core's budget is split into partial-sum
+shards that reduce into the firing neuron. Here that is the `model` axis:
+every weight matrix whose contraction dimension is sharded produces partial
+sums that XLA reduces — the PSUM neuron's 'accumulated current transmission'
+is the all-reduce. The mapping is:
+
+  TaiBai                         TPU mesh
+  ------                         --------
+  parallel-send over NCs     ->  TP over `model` (16-way within a pod row)
+  multi-core population      ->  DP over (`pod`,) `data`
+  PSUM partial currents      ->  contraction-dim sharding + psum
+  proxy-unit chip expansion  ->  the `pod` axis (inter-pod DCN/ICI)
+
+Rules are keyed on parameter path substrings; `param_specs` walks any params
+pytree and returns a matching PartitionSpec tree. `fsdp=True` additionally
+shards a replicated-after-TP dimension over `data` (ZeRO-3 via GSPMD: XLA
+inserts the use-site all-gathers).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# ---------------------------------------------------------------------------
+# process-wide mesh registry (set by launchers; None => no-op constraints)
+# ---------------------------------------------------------------------------
+
+_MESH: Optional[Mesh] = None
+_PURE_DP: bool = False
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def set_pure_dp(flag: bool) -> None:
+    """Pure data-parallel mode (perf iter rwkv-4): the `model` axis joins
+    the data axes; parameters ZeRO-3-shard over the combined axis. Chosen
+    for architectures whose activation-collective volume under TP exceeds
+    the FSDP parameter-gather volume (rwkv6's five distinct ddlerp
+    projection inputs make TP all-gather-heavy)."""
+    global _PURE_DP
+    _PURE_DP = flag
+
+
+def pure_dp() -> bool:
+    return _PURE_DP
+
+
+def dp_axes() -> Tuple[str, ...]:
+    """Mesh axes that jointly carry data parallelism."""
+    if _MESH is None:
+        return ("data",)
+    names = _MESH.axis_names
+    axes = tuple(a for a in ("pod", "data") if a in names)
+    if _PURE_DP and "model" in names:
+        axes = axes + ("model",)
+    return axes
+
+
+def _resolve(logical: Sequence) -> PartitionSpec:
+    """Map logical axis names -> mesh axes ('data' expands to (pod, data);
+    under pure_dp it absorbs 'model' too, and explicit 'model' axes vanish)."""
+    out = []
+    for ax in logical:
+        if ax == "data":
+            d = dp_axes()
+            out.append(d if len(d) > 1 else (d[0] if d else None))
+        elif ax == "model" and _PURE_DP:
+            out.append(None)
+        else:
+            out.append(ax)
+    return PartitionSpec(*out)
+
+
+def _axis_size(ax) -> int:
+    sizes = dict(zip(_MESH.axis_names, _MESH.devices.shape))
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(ax, 1)
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint when a mesh is registered; no-op otherwise.
+
+    Divisibility-aware: a dim that doesn't divide its axis product drops
+    trailing axes from the tuple until it does (e.g. global batch 256 on
+    the 2x16x16 mesh under pure_dp: (pod,data,model)=512 -> (pod,data)=32)."""
+    if _MESH is None:
+        return x
+    spec = _resolve(logical)
+    fixed = []
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        while axes and x.shape[dim] % _axis_size(axes) != 0:
+            axes = axes[:-1]
+        fixed.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, PartitionSpec(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# (path regex, spec WITHOUT the stacked-layer leading dim). The first match
+# wins. Specs use logical axes; "data" resolves to (pod, data) on multi-pod.
+_RULES = [
+    # embeddings / head: vocab over model (the big dim)
+    (r"embed/tok$", ("model", None)),
+    (r"embed/head$", (None, "model")),
+    (r"embed/pos$", (None, None)),
+    (r"patch_proj$", (None, None)),
+    # attention: heads over model
+    (r"attn/w[qkv]$", (None, "model")),
+    (r"attn/wo$", ("model", None)),
+    (r"attn/b[qkv]$", ("model",)),
+    # dense MLP: hidden over model
+    (r"(mlp|ffn)/w_(gate|up)$", (None, "model")),
+    (r"(mlp|ffn)/w_down$", ("model", None)),
+    (r"(mlp|ffn)/b_up$", ("model",)),
+    (r"(mlp|ffn)/b_down$", (None,)),
+    # MoE: experts over model (EP)
+    (r"moe/router$", (None, None)),
+    (r"moe/w_(gate|up|down)$", ("model", None, None)),
+    # Mamba2: d_inner (heads) over model
+    (r"mixer/w_[zx]$", (None, "model")),
+    (r"mixer/w_dt$", (None, "model")),
+    (r"mixer/w_(B|C)$", (None, None)),
+    (r"mixer/conv_w$", (None, "model")),
+    (r"mixer/conv_b$", ("model",)),
+    (r"mixer/(A_log|dt_bias|D)$", ("model",)),
+    (r"mixer/norm_w$", ("model",)),
+    (r"mixer/w_out$", ("model", None)),
+    # RWKV6: heads (= channels) over model
+    (r"mix/w[rkvg]$", (None, "model")),
+    (r"mix/wo$", ("model", None)),
+    (r"mix/u_bonus$", (None, None)),   # (H=40, hd) — H % 16 != 0
+    (r"mix/(A_dec|A_tsh)$", (None, None)),
+    (r"mix/B_dec$", (None, "model")),
+    (r"mix/B_tsh$", (None, None, "model")),
+    (r"mix/(w_base|ln_x_w|ln_x_b)$", ("model",)),
+    (r"mix/mu_(x|ffn)$", (None, None)),
+    (r"mix/wk_ffn$", (None, "model")),
+    (r"mix/wv_ffn$", ("model", None)),
+    (r"mix/wr_ffn$", (None, "model")),
+    # norms and everything scalar-ish: replicated
+    (r".*", None),
+]
+
+# FSDP: for these paths, additionally shard this dim (after TP) over `data`.
+_FSDP_DIM = [
+    (r"embed/tok$", 1), (r"embed/head$", 0),
+    (r"attn/w[qkv]$", 0), (r"attn/wo$", 1),
+    (r"(mlp|ffn)/w_(gate|up)$", 0), (r"(mlp|ffn)/w_down$", 1),
+    (r"moe/w_(gate|up|down)$", 2),
+    (r"mixer/w_[zx]$", 0), (r"mixer/w_out$", 1),
+    (r"mix/w[rkvgo]$", 0), (r"mix/wk_ffn$", 0), (r"mix/wv_ffn$", 1),
+    (r"mix/wr_ffn$", 0),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for(path_str: str, ndim: int, fsdp: bool = False,
+             stacked: bool = False) -> PartitionSpec:
+    """Sharding spec for one parameter. `stacked`: leading layer dim."""
+    body_ndim = ndim - (1 if stacked else 0)
+    if _PURE_DP:
+        # ZeRO-3 over the combined (pod, data, model) axis: shard the dim
+        # the FSDP table nominates (falls back to replicated for small /
+        # oddly-shaped leaves — divisibility enforced by the caller).
+        axes = [None] * body_ndim
+        for pat, dim in _FSDP_DIM:
+            if re.search(pat, path_str) and dim < body_ndim:
+                axes[dim] = "data"        # resolves to the combined axes
+                break
+        if stacked:
+            axes = [None] + axes
+        return _resolve(axes)
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            axes = list(spec) if spec is not None else [None] * body_ndim
+            break
+    if len(axes) != body_ndim:          # rank mismatch (e.g. scalars): replicate
+        axes = [None] * body_ndim
+    if fsdp:
+        for pat, dim in _FSDP_DIM:
+            if re.search(pat, path_str) and dim < body_ndim and axes[dim] is None:
+                axes[dim] = "data"
+                break
+    if stacked:
+        axes = [None] + axes
+    return _resolve(axes)
+
+
+def param_specs(params: Any, fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching `params` (layer-stacked aware)."""
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith("layers/") or "/layers/" in ps
+        return spec_for(ps, jnp.ndim(leaf), fsdp=fsdp, stacked=stacked)
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_spec(ndim: int = 2) -> PartitionSpec:
+    """Token batches: batch dim over (pod, data); rest replicated."""
+    return _resolve(["data"] + [None] * (ndim - 1))
+
+
+def state_specs(state: Any, fsdp: bool = False) -> Any:
+    """Specs for a TrainState-like pytree: params + optimizer moments share
+    the parameter rules (moments have identical shapes); scalars replicate."""
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        # strip the state prefix (params/opt.mu/opt.nu) to reuse param rules
+        ps = re.sub(r"^(params|mu|nu|opt_state/\d+)/", "", ps)
+        ps = re.sub(r"^(step|rng|metrics).*", "", ps)
+        if not ps or jnp.ndim(leaf) == 0:
+            return PartitionSpec()
+        stacked = ps.startswith("layers/") or "/layers/" in ps
+        return spec_for(ps, jnp.ndim(leaf), fsdp=fsdp, stacked=stacked)
+    return jax.tree_util.tree_map_with_path(leaf_spec, state)
+
+
+def cache_specs(cache: Any, batch_shardable: bool = True) -> Any:
+    """KV/state caches: batch over data, heads/channels over model.
+
+    Cache layouts (leading L = layers dim):
+      attn k/v     (L, B, S, Hk, hd)   -> (None, data, None, model, None)
+      ssm state    (L, B, H, P, N)     -> (None, data, model, None, None)
+      conv state   (L, B, K-1, C)      -> (None, data, None, model)
+      rwkv S       (L, B, H, hd, hd)   -> (None, data, model, None, None)
+      rwkv x_*     (L, B, d)           -> (None, data, model)
+      shared attn  (A, B, S, Hk, hd)   -> (None, data, None, model, None)
+
+    `batch_shardable=False` (long_500k: global_batch=1) switches to
+    SEQUENCE parallelism: the KV time axis shards over `data` (XLA reduces
+    the decode softmax across the sharded axis); per-head state tensors keep
+    only the `model` split.
+    """
+    model_size = 1
+    if _MESH is not None:
+        sizes = dict(zip(_MESH.axis_names, _MESH.devices.shape))
+        model_size = sizes.get("model", 1)
+
+    def ok(shape, axes):
+        for dim, ax in enumerate(axes):
+            if ax == "model" and shape[dim] % model_size != 0:
+                return False
+        return True
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        nd = jnp.ndim(leaf)
+        b = "data" if batch_shardable else None
+        if nd == 5:
+            if ps.endswith("S") or ps == "ssm" or ps.endswith("/ssm"):
+                cands = [[None, b, "model", None, None]]
+            else:
+                # attention KV (L, B, S, Hk, hd). Preference order: heads over
+                # `model` (GQA kv>=16); else TIME over `model` (sequence-
+                # parallel KV — XLA reduces the decode softmax across
+                # shards); else replicate the non-batch dims.
+                sseq = None if batch_shardable else "data"
+                cands = [[None, b, sseq, "model", None],
+                         [None, b, "model", None, None]]
+        elif nd == 4:
+            cands = [[None, b, None, "model"]]
+        elif nd == 3:
+            cands = [[None, b, "model"]]
+        else:
+            return PartitionSpec()
+        for c in cands:
+            if ok(leaf.shape, c):
+                return _resolve(c)
+        return _resolve([c_ if c_ != "model" else None for c_ in cands[-1]])
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)

@@ -1,0 +1,12 @@
+"""train — fault-tolerant training runtime.
+
+checkpoint.py   chunked-npz checkpoints with manifest + integrity hashes,
+                mesh-agnostic restore (save logical, reshard on load),
+                async save, keep-last-k, preemption-signal emergency save
+loop.py         the driver: restore-on-start, periodic checkpointing,
+                straggler detection, metrics, deterministic data skip-ahead
+"""
+
+from repro.train.checkpoint import (CheckpointManager, latest_step,
+                                    restore_checkpoint, save_checkpoint)
+from repro.train.loop import TrainLoopConfig, train_loop

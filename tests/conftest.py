@@ -1,0 +1,14 @@
+"""Test fixtures. NOTE: no XLA_FLAGS here — tests run on the single real CPU
+device (the 512-device override is dryrun.py-only, per the assignment)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,161 @@
+"""INTEG/FIRE engine + the paper's three application models (§V-B3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import events
+from repro.core.neuron import LI, LIF
+from repro.core.snn_layers import (BCIConfig, bci_finetune_fc, bci_forward,
+                                   bci_init, ff_integrate, make_dhsnn_shd,
+                                   make_srnn_ecg)
+
+
+def test_engine_feedforward_equals_manual():
+    """One hidden LIF layer driven by input spikes must equal a hand-rolled
+    loop (INTEG = locacc, FIRE = lif)."""
+    key = jax.random.PRNGKey(0)
+    T, B, n_in, n_h = 6, 2, 5, 4
+    w = jax.random.normal(key, (n_in, n_h)) * 0.8
+    x = (jax.random.uniform(jax.random.fold_in(key, 1), (T, B, n_in)) < 0.4
+         ).astype(jnp.float32)
+    nodes = [events.LayerNode("h", LIF(tau=0.9), ff_integrate,
+                              inputs=("input",), out_dim=n_h)]
+    params = {"h": {"w_input": w}}
+    _, outs, _ = events.run(nodes, params, x)
+
+    v = jnp.zeros((B, n_h))
+    for t in range(T):
+        v = 0.9 * v + x[t] @ w
+        s = (v >= 1.0).astype(jnp.float32)
+        v = v * (1 - s)
+        np.testing.assert_allclose(outs[t], s)
+
+
+def test_engine_recurrent_uses_previous_timestep():
+    """'self' input must deliver t-1 spikes (not same-step)."""
+    n_h = 3
+    w_in = jnp.eye(n_h) * 2.0          # input always fires the neuron
+    w_self = jnp.full((n_h, n_h), -5.0)
+    nodes = [events.LayerNode("h", LIF(tau=0.0), ff_integrate,
+                              inputs=("input", "self"), out_dim=n_h)]
+    params = {"h": {"w_input": w_in, "w_self": w_self}}
+    x = jnp.ones((3, 1, n_h))
+    _, outs, _ = events.run(nodes, params, x)
+    # t=0: fires (no recurrence yet); t=1: inhibited by t=0 spikes
+    np.testing.assert_allclose(outs[0], 1.0)
+    np.testing.assert_allclose(outs[1], 0.0)
+    np.testing.assert_allclose(outs[2], 1.0)
+
+
+def test_engine_skip_connection_delay():
+    """'src@d' must deliver spikes delayed by d steps (delayed-fire, Fig 8c)."""
+    nodes = [
+        events.LayerNode("a", LIF(tau=0.0, v_th=0.5), ff_integrate,
+                         inputs=("input",), out_dim=1),
+        events.LayerNode("b", LIF(tau=0.0, v_th=0.5), ff_integrate,
+                         inputs=("a@2",), out_dim=1),
+    ]
+    params = {"a": {"w_input": jnp.ones((1, 1))},
+              "b": {"w_a": jnp.ones((1, 1))}}
+    x = jnp.zeros((6, 1, 1)).at[0].set(1.0)       # single event at t=0
+    _, outs, recs = events.run(nodes, params, x, record=("a", "b"))
+    a_spikes = np.asarray(recs["a"][:, 0, 0])
+    b_spikes = np.asarray(recs["b"][:, 0, 0])
+    assert a_spikes[0] == 1.0
+    assert b_spikes[2] == 1.0 and b_spikes[:2].sum() == 0   # delayed 2 steps
+
+
+# ---------------------------------------------------------------------------
+# applications
+# ---------------------------------------------------------------------------
+
+
+def _train_a_bit(loss_fn, params, steps=30, lr=0.5):
+    losses = []
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    for i in range(steps):
+        l, g = grad_fn(params)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(gg))
+                          for gg in jax.tree.leaves(g)))
+        sc = jnp.minimum(1.0, 1.0 / (gn + 1e-9))      # clipped SGD
+        params = jax.tree.map(
+            lambda p, gg: p - lr * sc * gg if gg is not None else p,
+            params, g)
+        losses.append(float(l))
+    return params, losses
+
+
+def test_srnn_ecg_learns_both_variants():
+    """Both the heterogeneous (ALIF) model and its homogeneous ablation must
+    train to materially lower loss. NOTE: the paper's het>hom accuracy
+    ordering (Fig. 15a) is a claim about real QTDB recordings; on the
+    synthetic generator the ordering is seed-dependent, so the benchmark
+    (bench_applications) reports both numbers and this test asserts
+    learnability only."""
+    from repro.data.spikes import gen_ecg_qtdb
+    spikes, labels = gen_ecg_qtdb(8, T=160)
+    x = jnp.asarray(spikes.transpose(1, 0, 2))     # (T, B, 4)
+    y = jnp.asarray(labels.T)                      # (T, B)
+
+    def make_loss(nodes, params0):
+        def loss(params):
+            _, outs, _ = events.run(nodes, params, x)   # (T, B, 6)
+            logp = jax.nn.log_softmax(outs, -1)
+            return -jnp.mean(jnp.take_along_axis(logp, y[..., None], -1))
+        return loss
+
+    for het in (True, False):
+        nodes, params = make_srnn_ecg(jax.random.PRNGKey(0),
+                                      heterogeneous=het, n_hidden=32)
+        loss = make_loss(nodes, params)
+        _, losses = _train_a_bit(loss, params, steps=60, lr=0.1)
+        assert losses[-1] < 0.7 * losses[0], \
+            f"no learning (het={het}): {losses[0]} -> {losses[-1]}"
+
+
+def test_dhsnn_shd_learns():
+    from repro.data.spikes import gen_shd_spikes
+    spikes, labels = gen_shd_spikes(16, T=40)
+    x = jnp.asarray(spikes.transpose(1, 0, 2))
+    y = jnp.asarray(labels)
+    nodes, params = make_dhsnn_shd(jax.random.PRNGKey(1), n_hidden=32)
+
+    def loss(params):
+        _, outs, _ = events.run(nodes, params, x)
+        logits = jnp.mean(outs, axis=0)            # time-averaged membrane
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(y)), y])
+
+    _, losses = _train_a_bit(loss, params, steps=25, lr=0.3)
+    assert losses[-1] < losses[0] * 0.9
+
+
+def test_bci_cross_day_finetune_recovers_accuracy():
+    """The paper's on-chip learning demo: train day 0, accuracy drops on a
+    drifted day, 32-sample FC-only fine-tune recovers it."""
+    from repro.data.spikes import gen_bci_trials
+    cfg = BCIConfig(n_channels=32, n_steps=20, n_paths=4, d_path=8)
+    params = bci_init(jax.random.PRNGKey(0), cfg)
+
+    x0, y0 = gen_bci_trials(96, day=0, n_channels=32, n_bins=20)
+    x0, y0 = jnp.asarray(x0), jnp.asarray(y0)
+
+    def loss(params):
+        logits, _ = bci_forward(params, x0, cfg)
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(y0)), y0])
+
+    params, losses = _train_a_bit(loss, params, steps=60, lr=0.05)
+    assert losses[-1] < losses[0] * 0.8
+
+    def acc(params, x, y):
+        logits, _ = bci_forward(params, jnp.asarray(x), cfg)
+        return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
+
+    xt, yt = gen_bci_trials(64, day=3, n_channels=32, n_bins=20, seed=5)
+    before = acc(params, xt, yt)
+    xf, yf = gen_bci_trials(32, day=3, n_channels=32, n_bins=20, seed=9)
+    tuned, _ = bci_finetune_fc(params, jnp.asarray(xf), jnp.asarray(yf),
+                               cfg, lr=0.05, steps=25)
+    after = acc(tuned, xt, yt)
+    assert after >= before, (before, after)

@@ -1,0 +1,88 @@
+"""Compiler-stack tests: fusion, partition budgets, placement optimization,
+resource merging, and the cores<->throughput trade-off (Fig. 12/13e)."""
+
+import numpy as np
+import pytest
+
+from repro.core.mapping import (CORE_FANIN, CORE_NEURONS, Op, compile_network,
+                                fuse_ops, merge_cores, optimize_placement,
+                                partition, place_zigzag, traffic_cost)
+from repro.configs.snn_models import MODELS, to_ops
+
+
+def _toy_ops():
+    return [
+        Op("conv1", "conv", 4096, 27, ("input",)),
+        Op("bn1", "bn", 4096, 1, ("conv1",)),
+        Op("fc1", "fc", 512, 4096, ("bn1",)),
+        Op("fc2", "fc", 10, 512, ("fc1",)),
+    ]
+
+
+def test_fuse_folds_bn_into_conv():
+    ir = fuse_ops(_toy_ops())
+    names = [o.name for o in ir]
+    assert "bn1" not in names
+    conv = next(o for o in ir if o.name == "conv1")
+    assert "bn1" in conv.fused
+    fc1 = next(o for o in ir if o.name == "fc1")
+    assert fc1.inputs == ("conv1",)          # consumer re-routed
+
+
+def test_partition_respects_neuron_budget():
+    cores = partition(fuse_ops(_toy_ops()))
+    for c in cores:
+        assert c.neuron_hi - c.neuron_lo <= CORE_NEURONS
+    covered = {}
+    for c in cores:
+        covered.setdefault(c.op, []).append((c.neuron_lo, c.neuron_hi))
+    for op, spans in covered.items():
+        spans.sort()
+        assert spans[0][0] == 0
+        for (a, b), (c_, d) in zip(spans, spans[1:]):
+            assert b == c_                   # contiguous, no gaps
+
+
+def test_fanin_expansion_charges_psum_parts():
+    """fan-in 4096 > 2048 limit -> PSUM split halves the per-core capacity
+    (TaiBai keeps PSUM + spiking neurons in ONE core, Fig. 11)."""
+    big = [Op("fc", "fc", CORE_NEURONS, 2 * CORE_FANIN, ("input",))]
+    small = [Op("fc", "fc", CORE_NEURONS, CORE_FANIN, ("input",))]
+    assert len(partition(big)) == 2 * len(partition(small))
+
+
+def test_merge_reduces_cores():
+    ops = [Op(f"fc{i}", "fc", 40, 100, ()) for i in range(8)]
+    cores = partition(ops)
+    merged = merge_cores(cores, ops)
+    assert len(merged) < len(cores)
+    assert len(merged) >= int(np.ceil(8 * 40 / CORE_NEURONS))
+
+
+def test_placement_optimizer_improves_cost():
+    rng = np.random.default_rng(0)
+    n = 24
+    traffic = rng.random((n, n)) * (rng.random((n, n)) < 0.2)
+    pos0 = place_zigzag(n)
+    c0 = traffic_cost(traffic, pos0)
+    _, c1 = optimize_placement(traffic, iters=1500, seed=1)
+    assert c1 <= c0
+
+
+def test_tradeoff_throughput_uses_more_cores():
+    """Fig. 13e: throughput objective spreads populations over more cores."""
+    specs, _ = MODELS["plif_net"]()
+    ops = to_ops(specs)
+    m_cores = compile_network(ops, objective="cores", anneal_iters=50)
+    m_tp = compile_network(ops, objective="throughput", anneal_iters=50)
+    assert m_tp.meta["n_cores"] > m_cores.meta["n_cores"]
+
+
+@pytest.mark.parametrize("model", ["plif_net", "resnet19", "5blocks_net"])
+def test_table2_models_compile(model):
+    specs, name = MODELS[model]()
+    ops = to_ops(specs)
+    mapping = compile_network(ops, objective="cores", anneal_iters=20,
+                              grid=(40, 40))
+    assert mapping.meta["n_cores"] > 0
+    assert mapping.positions.shape[0] == len(mapping.cores)

@@ -1,0 +1,123 @@
+"""Per-assigned-architecture smoke tests (reduced same-family configs):
+one forward + one train step + one decode step on CPU, asserting shapes and
+finiteness; decode-vs-forward consistency for each family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig
+
+KEY = jax.random.PRNGKey(0)
+B, T = 2, 16
+
+
+def _batch(cfg):
+    b = {"tokens": jax.random.randint(KEY, (B, T + 1), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(KEY, (B, cfg.encoder_len, cfg.d_model))
+    if cfg.family == "vlm":
+        b["patches"] = jax.random.normal(KEY, (B, cfg.n_patches, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    params = lm.model_init(KEY, cfg)
+    batch = _batch(cfg)
+    logits, aux = lm.model_forward(params, batch, cfg)
+    assert logits.shape == (B, T, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    if cfg.family == "moe":
+        assert float(aux["lb_loss"]) >= 1.0 - 1e-3   # >= perfect balance
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_no_nans(arch):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    state = lm.init_train_state(KEY, cfg)
+    step = jax.jit(lm.make_train_step(cfg, AdamWConfig(lr=1e-3)))
+    state, m = step(state, _batch(cfg))
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+    leaves = jax.tree.leaves(state["params"])
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "rwkv6-3b", "zamba2-1.2b",
+                                  "olmoe-1b-7b", "whisper-small"])
+def test_decode_consistent_with_forward(arch):
+    """Teacher-forced decode (token by token through the cache path) must
+    reproduce the full-sequence forward logits for every family."""
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    if cfg.family == "moe":
+        # decode-vs-forward consistency holds when no token is capacity-
+        # dropped; give the router ample slots for the comparison
+        cfg = cfg.replace(capacity_factor=8.0)
+    params = lm.model_init(KEY, cfg)
+    batch = _batch(cfg)
+    toks = batch["tokens"][:, :-1]
+
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        memory = encdec.encode(params, batch["frames"].astype(cfg.dtype), cfg)
+        full = encdec.decode_forward(params, toks, memory, cfg)
+    else:
+        full, _ = lm.model_forward(params, batch, cfg)
+        if cfg.family == "vlm":
+            pass  # patch prefix already stripped by model_forward
+
+    cache = lm.init_cache(cfg, B, T + 8)
+    if cfg.family == "encdec":
+        cache = encdec.prefill_cross(params, memory, cache, cfg)
+    from repro.models import transformer as tf_mod
+    from repro.models import encdec as encdec_mod
+    step_logits = []
+    for t in range(T):
+        if cfg.family == "encdec":
+            lg, cache = encdec_mod.decode_step(params, toks[:, t:t+1], cache,
+                                               jnp.asarray(t), cfg)
+        else:
+            lg, cache = tf_mod.decode_step(params, toks[:, t:t+1], cache,
+                                           jnp.asarray(t), cfg)
+        step_logits.append(lg[:, 0])
+    dec = jnp.stack(step_logits, axis=1)
+
+    if cfg.family == "vlm":
+        # forward path prepends patches; compare text-only stream decoded
+        # without patches against a text-only forward
+        full, _ = lm.model_forward(params, {"tokens": batch["tokens"]}, cfg)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_minicpm_residual_scaling_applied():
+    cfg = get_smoke_config("minicpm-2b")
+    assert 0 < cfg.residual_scale < 1
+
+
+def test_qwen2_has_qkv_bias():
+    cfg = get_smoke_config("qwen2-1.5b").replace(dtype="float32")
+    params = lm.model_init(KEY, cfg)
+    assert "bq" in jax.tree_util.tree_leaves_with_path(params)[0][0][0].key \
+        or any("bq" in str(p) for p, _ in
+               jax.tree_util.tree_leaves_with_path(params))
+
+
+def test_spiking_ffn_variant_trains():
+    """The paper's technique composed onto an LM: binarized (spiking) FFN
+    activations with surrogate grads still train."""
+    cfg = get_smoke_config("qwen2-1.5b").replace(dtype="float32",
+                                                 spiking_ffn=True)
+    state = lm.init_train_state(KEY, cfg)
+    step = jax.jit(lm.make_train_step(cfg, AdamWConfig(lr=1e-3)))
+    batch = _batch(cfg)
+    l0 = None
+    for i in range(8):
+        state, m = step(state, batch)
+        l0 = l0 or float(m["loss"])
+    assert float(m["loss"]) < l0

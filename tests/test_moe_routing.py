@@ -1,0 +1,64 @@
+"""Grouped-MoE routing invariants (hypothesis) — the dispatch tensor is a
+materialized fan-out table (DESIGN.md §6), so table semantics must hold:
+every surviving token lands in exactly one slot of each chosen expert, and
+combine weights are the renormalized router gates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models.moe import moe_init, route
+
+
+def _cfg(E, K, cap=8.0, group=64):
+    return get_smoke_config("olmoe-1b-7b").replace(
+        n_experts=E, top_k=K, capacity_factor=cap, moe_group=group,
+        dtype="float32")
+
+
+@given(st.integers(2, 8), st.integers(1, 3), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_route_dispatch_is_permutation_like(E, K, seed):
+    K = min(K, E)
+    cfg = _cfg(E, K)
+    key = jax.random.PRNGKey(seed)
+    params = moe_init(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 32, cfg.d_model))
+    dispatch, combine, aux = route(params, x, cfg)
+    # ample capacity: every token occupies exactly K (expert, slot) cells
+    per_token = jnp.sum(dispatch, axis=(2, 3))
+    np.testing.assert_allclose(np.asarray(per_token), K, atol=1e-5)
+    # each (expert, slot) holds at most one token
+    per_slot = jnp.sum(dispatch, axis=1)
+    assert float(jnp.max(per_slot)) <= 1.0 + 1e-5
+    # combine weights sum to ~1 per token (renormalized top-k gates)
+    gates = jnp.sum(combine, axis=(2, 3))
+    np.testing.assert_allclose(np.asarray(gates), 1.0, atol=1e-4)
+
+
+def test_route_respects_capacity():
+    cfg = _cfg(E=4, K=2, cap=0.25, group=64)   # tiny capacity -> drops
+    key = jax.random.PRNGKey(0)
+    params = moe_init(key, cfg)
+    x = jax.random.normal(key, (1, 64, cfg.d_model))
+    dispatch, _, _ = route(params, x, cfg)
+    C = dispatch.shape[-1]
+    per_slot = jnp.sum(dispatch, axis=1)
+    assert float(jnp.max(per_slot)) <= 1.0 + 1e-5
+    assert float(jnp.sum(dispatch)) <= 4 * C + 1e-5   # bounded by capacity
+
+
+def test_grouped_equals_ungrouped_when_one_group():
+    """moe_group >= tokens reduces to a single group — same routing."""
+    cfg1 = _cfg(E=4, K=2, group=64)
+    cfg2 = _cfg(E=4, K=2, group=1 << 20)
+    key = jax.random.PRNGKey(3)
+    params = moe_init(key, cfg1)
+    from repro.models.moe import moe_layer
+    x = jax.random.normal(key, (2, 32, cfg1.d_model))
+    y1, _ = moe_layer(params, x, cfg1)
+    y2, _ = moe_layer(params, x, cfg2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)

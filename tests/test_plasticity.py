@@ -1,0 +1,120 @@
+"""Plasticity tests: STDP causality properties (hypothesis) + the
+accumulated-spike backprop identity (paper §IV-B)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.plasticity import (STDPConfig, accumulated_spike_fc,
+                                   fuse_bn1d_fc, stdp_init, stdp_run,
+                                   stdp_step)
+
+
+def _pair_run(dt_pre: int, dt_post: int, T: int = 20):
+    """One pre spike at dt_pre, one post spike at dt_post."""
+    pre = np.zeros((T, 1, 1), np.float32)
+    post = np.zeros((T, 1, 1), np.float32)
+    pre[dt_pre, 0, 0] = 1.0
+    post[dt_post, 0, 0] = 1.0
+    w = jnp.zeros((1, 1))
+    return float(stdp_run(STDPConfig(), w, jnp.asarray(pre),
+                          jnp.asarray(post))[0, 0])
+
+
+def test_stdp_causal_potentiates():
+    assert _pair_run(3, 6) > 0          # pre before post: LTP
+
+
+def test_stdp_acausal_depresses():
+    assert _pair_run(6, 3) < 0          # post before pre: LTD
+
+
+def test_stdp_window_decays():
+    """|dw| shrinks as |dt| grows (exponential STDP window)."""
+    close = abs(_pair_run(5, 7))
+    far = abs(_pair_run(5, 15))
+    assert close > far > 0
+
+
+@given(st.integers(0, 9), st.integers(0, 9))
+@settings(max_examples=20, deadline=None)
+def test_stdp_sign_matches_timing(t_pre, t_post):
+    if t_pre == t_post:
+        return
+    dw = _pair_run(t_pre, t_post, T=12)
+    if t_pre < t_post:
+        assert dw > 0
+    else:
+        assert dw < 0
+
+
+def test_stdp_bounds_respected():
+    cfg = STDPConfig(w_min=-0.5, w_max=0.5, a_plus=10.0, a_minus=10.0)
+    rng = np.random.default_rng(0)
+    pre = (rng.random((50, 2, 8)) < 0.5).astype(np.float32)
+    post = (rng.random((50, 2, 4)) < 0.5).astype(np.float32)
+    w = stdp_run(cfg, jnp.zeros((8, 4)), jnp.asarray(pre), jnp.asarray(post))
+    assert float(jnp.max(w)) <= 0.5 and float(jnp.min(w)) >= -0.5
+
+
+# ---------------------------------------------------------------------------
+# accumulated-spike backprop
+# ---------------------------------------------------------------------------
+
+
+def test_accumulated_fc_forward_identity(rng):
+    """Forward == sum_t (s_t @ W + b): lossless for time-summed readouts."""
+    s = (rng.random((7, 3, 10)) < 0.3).astype(np.float32)
+    w = rng.standard_normal((10, 4)).astype(np.float32)
+    b = rng.standard_normal(4).astype(np.float32)
+    out = accumulated_spike_fc(jnp.asarray(s), jnp.asarray(w), jnp.asarray(b))
+    ref = sum(s[t] @ w + b for t in range(7))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_accumulated_fc_weight_grad_exact(rng):
+    """dL/dW through the accumulated path == full BPTT dL/dW (paper's claim
+    that the approximation is exact for the readout weights)."""
+    s = (rng.random((7, 3, 10)) < 0.3).astype(np.float32)
+    w = rng.standard_normal((10, 4)).astype(np.float32)
+    b = np.zeros(4, np.float32)
+    y = rng.integers(0, 4, 3)
+
+    def loss_acc(w):
+        logits = accumulated_spike_fc(jnp.asarray(s), w, jnp.asarray(b))
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(3), y])
+
+    def loss_full(w):
+        logits = sum(jnp.asarray(s[t]) @ w + jnp.asarray(b) for t in range(7))
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(3), y])
+
+    g1 = jax.grad(loss_acc)(jnp.asarray(w))
+    g2 = jax.grad(loss_full)(jnp.asarray(w))
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+
+
+def test_accumulated_fc_memory_saving():
+    """The VJP residual stores (B, N), not (T, B, N)."""
+    s = jnp.ones((100, 2, 16))
+    w = jnp.ones((16, 4))
+    b = jnp.zeros(4)
+    _, vjp_fn = jax.vjp(accumulated_spike_fc, s, w, b)
+    res_sizes = [x.size for x in jax.tree.leaves(vjp_fn)
+                 if hasattr(x, "size")]
+    assert max(res_sizes) <= 2 * 16 + 16 * 4   # acc + w, no (T,B,N) history
+
+
+def test_bn1d_fc_fusion(rng):
+    x = rng.standard_normal((5, 8)).astype(np.float32)
+    gamma = rng.standard_normal(8).astype(np.float32)
+    beta = rng.standard_normal(8).astype(np.float32)
+    mean = rng.standard_normal(8).astype(np.float32)
+    var = rng.random(8).astype(np.float32) + 0.5
+    w = rng.standard_normal((8, 3)).astype(np.float32)
+    b = rng.standard_normal(3).astype(np.float32)
+    ref = ((x - mean) / np.sqrt(var + 1e-5) * gamma + beta) @ w + b
+    wf, bf = fuse_bn1d_fc(*map(jnp.asarray, (gamma, beta, mean, var)),
+                          1e-5, jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(x @ np.asarray(wf) + np.asarray(bf), ref,
+                               rtol=1e-4, atol=1e-4)

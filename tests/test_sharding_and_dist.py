@@ -1,0 +1,184 @@
+"""Distribution-layer tests: sharding rules, HLO collective parser,
+multi-device lowering in a subprocess (8 fake devices), gradient
+compression, serving loop, behavioural simulator."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.roofline.hlo import collective_bytes
+from repro.sharding import rules
+
+
+def test_param_specs_match_rules():
+    params = {
+        "embed": {"tok": jnp.zeros((128, 32)), "head": jnp.zeros((32, 128))},
+        "layers": {"attn": {"wq": jnp.zeros((4, 32, 64)),
+                            "wo": jnp.zeros((4, 64, 32))},
+                   "mlp": {"w_gate": jnp.zeros((4, 32, 96)),
+                           "w_down": jnp.zeros((4, 96, 32))},
+                   "norm1": jnp.zeros((4, 32))},
+    }
+    specs = rules.param_specs(params)
+    assert specs["embed"]["tok"] == PartitionSpec("model", None)
+    assert specs["layers"]["attn"]["wq"] == PartitionSpec(None, None, "model")
+    assert specs["layers"]["attn"]["wo"] == PartitionSpec(None, "model", None)
+    assert specs["layers"]["mlp"]["w_down"] == PartitionSpec(None, "model", None)
+    assert specs["layers"]["norm1"] == PartitionSpec(None, None)
+
+
+def test_fsdp_adds_data_axis():
+    params = {"layers": {"mlp": {"w_gate": jnp.zeros((4, 32, 96))}}}
+    specs = rules.param_specs(params, fsdp=True)
+    assert specs["layers"]["mlp"]["w_gate"] == \
+        PartitionSpec(None, "data", "model")
+
+
+def test_state_specs_share_param_rules():
+    state = {"params": {"embed": {"tok": jnp.zeros((128, 32))}},
+             "mu": {"embed": {"tok": jnp.zeros((128, 32))}},
+             "nu": {"embed": {"tok": jnp.zeros((128, 32))}},
+             "step": jnp.int32(0)}
+    specs = rules.state_specs(state)
+    assert specs["params"]["embed"]["tok"] == specs["mu"]["embed"]["tok"] \
+        == PartitionSpec("model", None)
+    assert specs["step"] == PartitionSpec()
+
+
+def test_collective_parser_counts_known_hlo():
+    hlo = textwrap.dedent("""
+    HloModule test
+    ENTRY %main (p0: f32[256,128]) -> f32[256,128] {
+      %p0 = f32[256,128]{1,0} parameter(0)
+      %ar = f32[256,128]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+      %ag = f32[512,128]{1,0} all-gather(%ar), dimensions={0}
+      ROOT %cp = f32[256,128]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+    }
+    """)
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 256 * 128 * 4
+    assert out["all-gather"] == 512 * 128 * 4
+    assert out["collective-permute"] == 256 * 128 * 4
+    assert out["total_bytes"] == (256 + 512 + 256) * 128 * 4
+
+
+def test_collective_parser_scales_by_trip_count():
+    hlo = textwrap.dedent("""
+    HloModule test
+    %body (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+      %p = (s32[], f32[64]) parameter(0)
+      %x = f32[64]{0} get-tuple-element(%p), index=1
+      %ar = f32[64]{0} all-reduce(%x), to_apply=%add
+      ROOT %t = (s32[], f32[64]) tuple(%i, %ar)
+    }
+    ENTRY %main (p0: f32[64]) -> f32[64] {
+      %w = (s32[], f32[64]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+      ROOT %r = f32[64]{0} get-tuple-element(%w), index=1
+    }
+    """)
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 64 * 4 * 12
+
+
+DRYRUN_SUBPROCESS = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, json
+import jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_mesh
+from repro.sharding import rules
+
+mesh = make_mesh((2, 4), ("data", "model"))
+rules.set_mesh(mesh)
+cfg = get_smoke_config("{arch}").replace(
+    d_model=128, d_ff=256, n_heads=8, n_kv_heads=8 if "{arch}" != "qwen2-1.5b" else 2,
+    vocab_size=512)
+mode, inputs, shardings = specs_mod.cell_inputs(cfg, "{shape}", mesh)
+step = specs_mod.step_fn_for(cfg, mode)
+compiled = jax.jit(step, in_shardings=shardings).lower(*inputs).compile()
+cost = compiled.cost_analysis()
+print(json.dumps({{"flops": cost.get("flops", 0.0), "ok": True}}))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen2-1.5b", "train_4k"),
+    ("olmoe-1b-7b", "train_4k"),
+    ("rwkv6-3b", "train_4k"),      # pure_dp (ZeRO-3) lowering
+    ("rwkv6-3b", "decode_32k"),    # decode keeps TP under pure_dp
+])
+def test_dryrun_tiny_mesh_subprocess(arch, shape):
+    """The dry-run machinery on an 8-device fake mesh (subprocess so the
+    device-count override can't leak into other tests)."""
+    code = DRYRUN_SUBPROCESS.format(arch=arch, shape=shape)
+    # shrink the shapes via SHAPES override? cells use full shapes; instead
+    # patch SHAPES in-process to tiny values:
+    code = code.replace(
+        'mode, inputs, shardings',
+        'from repro.models.config import SHAPES, ShapeConfig\n'
+        'import repro.models.config as mc\n'
+        'mc.SHAPES["train_4k"] = ShapeConfig("train_4k", 64, 8, "train")\n'
+        'mc.SHAPES["decode_32k"] = ShapeConfig("decode_32k", 64, 8, "decode")\n'
+        'mode, inputs, shardings')
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["flops"] > 0
+
+
+def test_grad_compression_unbiased():
+    from repro.optim.compression import compress_grads
+    g = {"w": jnp.linspace(-1, 1, 1024).reshape(32, 32)}
+    keys = [jax.random.PRNGKey(i) for i in range(32)]
+    outs = jnp.stack([compress_grads(g, k)["w"] for k in keys])
+    err = jnp.mean(outs, 0) - g["w"]
+    assert float(jnp.max(jnp.abs(err))) < 4e-3     # unbiased estimator
+    # and each sample is within one quantization step
+    step = 2.0 / 254
+    assert float(jnp.max(jnp.abs(outs[0] - g["w"]))) <= step * 1.05
+
+
+def test_serving_loop_greedy_consistent():
+    from repro.configs import get_smoke_config
+    from repro.models import lm
+    from repro.serve.loop import Request, ServeConfig, generate
+    cfg = get_smoke_config("qwen2-1.5b").replace(dtype="float32")
+    params = lm.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(3)]
+    reqs = [Request(p, max_new=4) for p in prompts]
+    outs = generate(params, cfg, reqs, ServeConfig(batch=2, max_seq=32))
+    assert len(outs) == 3 and all(len(o) == 4 for o in outs)
+    # same request twice -> same greedy tokens
+    outs2 = generate(params, cfg, [Request(prompts[0], max_new=4)],
+                     ServeConfig(batch=1, max_seq=32))
+    np.testing.assert_array_equal(outs[0], outs2[0])
+
+
+def test_simulator_energy_and_gpu_comparison():
+    from repro.core.simulator import LayerStats, energy_per_sop, simulate
+    layers = [LayerStats("h", 4096, 1024, 0.02, 2 * 4096 * 1024)]
+    rep = simulate(layers, timesteps=100)
+    assert rep.power_w < 2.5                     # chip-class power
+    assert rep.efficiency_x > 10                 # beats dense GPU on sparse
+    assert 0.1 < energy_per_sop(rep) < 100
+    # higher spike rate -> more energy, lower efficiency (paper §V-C1)
+    rep_hot = simulate([LayerStats("h", 4096, 1024, 0.33,
+                                   2 * 4096 * 1024)], timesteps=100)
+    assert rep_hot.energy_j > rep.energy_j
+    assert rep_hot.efficiency_x < rep.efficiency_x
