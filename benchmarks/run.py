@@ -1,11 +1,24 @@
-"""Run every benchmark: `PYTHONPATH=src python -m benchmarks.run`.
+"""Run benchmark suites: `PYTHONPATH=src python -m benchmarks.run [--only a,b]`.
 
-Writes the aggregate to experiments/bench_results.json."""
+Emits machine-readable JSON so CI can archive a perf trajectory:
+
+  experiments/BENCH_<suite>.json   one file per suite, schema below
+  experiments/bench_results.json   the aggregate (back-compat)
+
+Per-suite schema (v1):
+  {"schema": 1, "suite": str, "created_unix": float, "host": {...},
+   "seconds": float, "ok": bool, "result": {...} | "error": str}
+
+`--only kernels,topology_storage` is the CI benchmarks-smoke selection.
+"""
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import platform
+import subprocess
 import time
 import traceback
 
@@ -25,27 +38,88 @@ SUITES = [
     ("roofline", bench_roofline),
 ]
 
+SCHEMA_VERSION = 1
 
-def main():
-    results = {}
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True, timeout=5,
+                              ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _host_meta() -> dict:
+    import jax
+
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "git_sha": _git_sha(),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Run benchmark suites and emit BENCH_*.json artifacts.")
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite names (default: all)")
+    ap.add_argument("--out-dir", default="experiments",
+                    help="directory for BENCH_*.json + aggregate")
+    ap.add_argument("--list", action="store_true",
+                    help="list suite names and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, _ in SUITES:
+            print(name)
+        return 0
+
+    selected = SUITES
+    if args.only:
+        wanted = [s.strip() for s in args.only.split(",") if s.strip()]
+        known = {name for name, _ in SUITES}
+        unknown = sorted(set(wanted) - known)
+        if unknown:
+            ap.error(f"unknown suites {unknown}; known: {sorted(known)}")
+        selected = [(n, m) for n, m in SUITES if n in wanted]
+
+    host = _host_meta()
+    os.makedirs(args.out_dir, exist_ok=True)
+    aggregate = {"schema": SCHEMA_VERSION, "created_unix": time.time(),
+                 "host": host, "suites": {}}
     failures = 0
-    for name, mod in SUITES:
+    for name, mod in selected:
         print(f"\n{'='*72}\n[{name}]")
+        entry = {"schema": SCHEMA_VERSION, "suite": name,
+                 "created_unix": time.time(), "host": host}
         t0 = time.time()
         try:
-            results[name] = {"result": mod.run(),
-                             "seconds": round(time.time() - t0, 1)}
+            entry["result"] = mod.run()
+            entry["ok"] = True
         except Exception as e:
             failures += 1
-            results[name] = {"error": repr(e)}
+            entry["error"] = repr(e)
+            entry["ok"] = False
             traceback.print_exc()
-    os.makedirs("experiments", exist_ok=True)
-    with open("experiments/bench_results.json", "w") as f:
-        json.dump(results, f, indent=1, default=str)
-    print(f"\n{'='*72}\nwrote experiments/bench_results.json; "
-          f"{len(SUITES) - failures}/{len(SUITES)} suites ok")
-    raise SystemExit(1 if failures else 0)
+        entry["seconds"] = round(time.time() - t0, 1)
+        path = os.path.join(args.out_dir, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(entry, f, indent=1, default=str)
+        print(f"[{name}] {'ok' if entry['ok'] else 'FAILED'} "
+              f"in {entry['seconds']}s -> {path}")
+        aggregate["suites"][name] = entry
+    agg_path = os.path.join(args.out_dir, "bench_results.json")
+    with open(agg_path, "w") as f:
+        json.dump(aggregate, f, indent=1, default=str)
+    print(f"\n{'='*72}\nwrote {agg_path}; "
+          f"{len(selected) - failures}/{len(selected)} suites ok")
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -103,7 +103,13 @@ def gen_bci_trials(n: int, day: int = 0, seed: int = 0, n_channels: int = 128,
     """
     rng = np.random.default_rng(seed)
     day_rng = np.random.default_rng(1000 + day)
-    base_tuning = rng.standard_normal((n_classes, n_channels))
+    # The class->channel tuning defines the TASK and must be identical for
+    # every (seed, day): only trial noise varies with `seed`, only the
+    # drift/gain shift with `day`. Drawing it from `rng` (as this function
+    # originally did) gave each seed a different task, so cross-day
+    # fine-tuning could never transfer.
+    task_rng = np.random.default_rng(424242)
+    base_tuning = task_rng.standard_normal((n_classes, n_channels))
     drift = 0.35 * day * day_rng.standard_normal((n_channels,))
     gain = 1.0 + 0.1 * day * day_rng.standard_normal((n_channels,))
     labels = rng.integers(0, n_classes, n)

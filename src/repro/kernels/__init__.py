@@ -5,10 +5,20 @@ Each kernel is a package with three modules:
   kernel.py — the `pl.pallas_call` body with explicit BlockSpec VMEM tiling
               (TPU is the target; `interpret=True` executes the same body in
               Python on CPU for validation)
-  ops.py    — the jit'd public wrapper: padding, block-shape selection,
-              dispatch between the Pallas path (TPU / interpret) and the
-              pure-XLA reference (used by the roofline path)
+  ops.py    — the jit'd public wrapper; registers a `KernelSpec` with the
+              unified registry and dispatches through it (ref vs Pallas
+              policy, block resolution, tuning-cache lookup all live in
+              `registry.py`, not per family)
   ref.py    — the pure-jnp oracle the tests assert against
+
+Cross-cutting machinery (mirroring the paper's single multi-granularity
+instruction set over heterogeneous dynamics):
+
+  registry.py — KernelSpec registration + the one dispatch/policy layer
+  tuning.py   — autotuner sweeping per-spec block candidates, persisted to
+                a JSON cache keyed by (kernel, backend, shape bucket)
+  parity.py   — ref<->Pallas forward + VJP agreement harness (fast CI tier)
+  common.py   — padding + backend helpers shared by the wrappers
 
 Kernels (paper instruction -> TPU adaptation):
 

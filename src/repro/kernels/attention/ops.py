@@ -1,10 +1,15 @@
-"""Flash attention public wrapper: head folding, padding, dispatch.
+"""Flash attention public wrapper: registry dispatch, padding, and a
+straight-through VJP.
 
 Forward-only kernel: training uses the XLA blockwise path
 (`models/attention.py`) whose checkpointed scan gives the flash backward;
-the kernel is the serving/prefill deployment path. `jax.lax.stop_gradient`
-is NOT applied — a straight-through to the reference VJP is provided so the
-kernel remains usable under jax.grad in tests.
+the kernel is the serving/prefill deployment path. To keep the kernel
+usable under `jax.grad` (tests, parity harness), the Pallas forward is
+wrapped in a custom VJP whose backward differentiates the dense reference —
+a straight-through gradient that is exact because forward parity holds.
+
+`bq`/`bk` default to None, meaning the registry resolves them (tuning
+cache, then the 512/512 spec defaults); an explicit int pins the axis.
 """
 
 from __future__ import annotations
@@ -14,31 +19,88 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.attention.kernel import flash_attention_pallas
 from repro.kernels.attention.ref import attention_ref
-from repro.kernels.common import interpret_mode, pad_axis, pick_block
+from repro.kernels.common import pad_axis
 
 
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0,
-                    bq: int = 512, bk: int = 512,
-                    force_pallas: bool = False) -> jax.Array:
-    """q: (BH, T, d); k, v: (BH, S, d) — heads pre-folded into batch."""
-    if not force_pallas:
-        return attention_ref(q, k, v, causal=causal, window=window)
-    BH, T, d = q.shape
+def _flash_fwd_raw(q, k, v, causal, window, bq, bk, interpret):
+    T = q.shape[1]
     S = k.shape[1]
-    bq = pick_block(T, bq, 128)
-    bk_ = pick_block(S, bk, 128)
     q_p, _ = pad_axis(q, 1, bq)
-    k_p, _ = pad_axis(k, 1, bk_)
-    v_p, _ = pad_axis(v, 1, bk_)
+    k_p, _ = pad_axis(k, 1, bk)
+    v_p, _ = pad_axis(v, 1, bk)
     # padded KV rows must not win the softmax: causal masking handles the
     # padded Q rows; padded KV columns are masked because their positions
     # exceed every valid q position only under causal. For non-causal, mask
     # via a window trick is not available — require exact multiples instead.
     if not causal:
-        assert S % bk_ == 0, "non-causal path requires S % bk == 0"
-    out = flash_attention_pallas(q_p, k_p, v_p, bq=bq, bk=bk_, causal=causal,
-                                 window=window, interpret=interpret_mode())
+        assert S % bk == 0, "non-causal path requires S % bk == 0"
+    out = flash_attention_pallas(q_p, k_p, v_p, bq=bq, bk=bk, causal=causal,
+                                 window=window, interpret=interpret)
     return out[:, :T]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_st(q, k, v, causal, window, bq, bk, interpret):
+    return _flash_fwd_raw(q, k, v, causal, window, bq, bk, interpret)
+
+
+def _flash_st_fwd(q, k, v, causal, window, bq, bk, interpret):
+    out = _flash_fwd_raw(q, k, v, causal, window, bq, bk, interpret)
+    return out, (q, k, v)
+
+
+def _flash_st_bwd(causal, window, bq, bk, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window), q, k, v)
+    return vjp(g)
+
+
+_flash_st.defvjp(_flash_st_fwd, _flash_st_bwd)
+
+
+def _pallas_impl(q, k, v, *, blocks, interpret, causal=True, window=0):
+    return _flash_st(q, k, v, causal, window, blocks["bq"], blocks["bk"],
+                     interpret)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = None, bk: int = None,
+                    force_pallas: bool = False) -> jax.Array:
+    """q: (BH, T, d); k, v: (BH, S, d) — heads pre-folded into batch."""
+    overrides = {n: v_ for n, v_ in (("bq", bq), ("bk", bk))
+                 if v_ is not None}
+    return registry.dispatch("attention", (q, k, v),
+                             force_pallas=force_pallas, overrides=overrides,
+                             causal=causal, window=window)
+
+
+def _make_inputs(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    BH, T, d = 2, 160, 64                     # non-multiple T exercises padding
+    q = jax.random.normal(k1, (BH, T, d), jnp.float32)
+    kk = jax.random.normal(k2, (BH, T, d), jnp.float32)
+    v = jax.random.normal(k3, (BH, T, d), jnp.float32)
+    return q, kk, v
+
+
+registry.register(registry.KernelSpec(
+    name="attention",
+    ref=attention_ref,
+    pallas=_pallas_impl,
+    apply=lambda args, force=False: flash_attention(*args, causal=True,
+                                                    force_pallas=force),
+    block_axes=(registry.BlockAxis("bq", "T", preferred=512, align=128),
+                registry.BlockAxis("bk", "S", preferred=512, align=128)),
+    dims_of=lambda q, k, v: {"T": q.shape[1], "S": k.shape[1]},
+    candidates=({"bq": 128, "bk": 128}, {"bq": 256, "bk": 256},
+                {"bq": 256, "bk": 512}, {"bq": 512, "bk": 512}),
+    make_inputs=_make_inputs,
+    diff_argnums=(0, 1, 2),
+    tol=2e-3,
+))

@@ -1,9 +1,13 @@
-"""Shared kernel utilities: dispatch policy, padding, block sizing."""
+"""Shared kernel utilities: backend detection and padding.
+
+Dispatch policy and block sizing used to live here too; they moved into
+`repro.kernels.registry` (`use_pallas` / `interpret_mode` / `fit_block`)
+so that every family resolves them through one code path.
+"""
 
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
@@ -12,14 +16,6 @@ import jax.numpy as jnp
 @functools.cache
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
-
-
-def interpret_mode() -> bool:
-    """Pallas kernels execute in interpret mode off-TPU (CPU container)."""
-    forced = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if forced is not None:
-        return forced == "1"
-    return not on_tpu()
 
 
 def pad_axis(x: jax.Array, axis: int, mult: int, value=0.0):
@@ -31,11 +27,3 @@ def pad_axis(x: jax.Array, axis: int, mult: int, value=0.0):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, constant_values=value), n
-
-
-def pick_block(n: int, preferred: int, align: int) -> int:
-    """Largest block <= preferred that is a multiple of `align` and covers n
-    evenly after padding; falls back to n rounded up to `align` when small."""
-    if n <= preferred:
-        return max(align, -(-n // align) * align)
-    return preferred

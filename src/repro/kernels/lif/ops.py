@@ -1,9 +1,10 @@
 """Public fused-LIF entry point with surrogate-gradient VJP.
 
-Forward runs the Pallas kernel (or the scan reference); backward applies
-STBP surrogate gradients through threshold + reset and the membrane-decay
-chain — implemented as a reverse-time linear recurrence, so it reuses the
-`linrec` machinery (and its kernel) rather than storing per-step residuals.
+Forward dispatches through the kernel registry (Pallas kernel when forced,
+scan reference otherwise); backward applies STBP surrogate gradients
+through threshold + reset and the membrane-decay chain — implemented as a
+reverse-time linear recurrence, so it reuses the `linrec` machinery (and
+its kernel) rather than storing per-step residuals.
 
 Adjoint derivation (hard reset, rectangle surrogate g(u) = d s/d u):
     u_t   = tau * v_{t-1} + I_t          (pre-reset potential)
@@ -27,18 +28,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.surrogate import _SURROGATES
-from repro.kernels.common import interpret_mode, pad_axis, pick_block
+from repro.kernels import registry
+from repro.kernels.common import pad_axis
 from repro.kernels.lif.kernel import lif_pallas
 from repro.kernels.lif.ref import lif_scan_ref
 
 
-def _fwd_impl(current, tau, v0, v_th, force_pallas):
-    if not force_pallas:
-        return lif_scan_ref(current, tau, v0, v_th)
+def _pallas_impl(current, tau, v0, *, blocks, interpret, v_th=1.0):
     T, B, N = current.shape
-    ct = pick_block(T, 256, 8)
-    bb = pick_block(B, 8, 8)
-    bn = pick_block(N, 512, 128)
+    ct, bb, bn = blocks["ct"], blocks["bb"], blocks["bn"]
     c_p, _ = pad_axis(current, 0, ct)
     c_p, _ = pad_axis(c_p, 1, bb)
     c_p, _ = pad_axis(c_p, 2, bn)
@@ -46,8 +44,13 @@ def _fwd_impl(current, tau, v0, v_th, force_pallas):
     v0_p, _ = pad_axis(v0, 0, bb)
     v0_p, _ = pad_axis(v0_p, 1, bn)
     s, vT = lif_pallas(c_p, tau_p, v0_p, v_th=v_th, ct=ct, bb=bb, bn=bn,
-                       interpret=interpret_mode())
+                       interpret=interpret)
     return s[:T, :B, :N], vT[:B, :N]
+
+
+def _fwd_impl(current, tau, v0, v_th, force_pallas):
+    return registry.dispatch("lif", (current, tau, v0),
+                             force_pallas=force_pallas, v_th=v_th)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
@@ -104,3 +107,33 @@ def _lif_bwd(v_th, surrogate, alpha, force_pallas, res, cts):
 
 
 lif_scan.defvjp(_lif_fwd, _lif_bwd)
+
+
+def _make_inputs(key):
+    k1, k2 = jax.random.split(key)
+    T, B, N = 20, 3, 130                      # non-multiples exercise padding
+    current = 0.6 * jax.random.normal(k1, (T, B, N), jnp.float32)
+    tau = jax.random.uniform(k2, (N,), jnp.float32, 0.7, 0.98)
+    v0 = jnp.zeros((B, N), jnp.float32)
+    return current, tau, v0
+
+
+registry.register(registry.KernelSpec(
+    name="lif",
+    ref=lif_scan_ref,
+    pallas=_pallas_impl,
+    apply=lambda args, force=False: lif_scan(*args, 1.0, "rectangle", 1.0,
+                                             force),
+    block_axes=(registry.BlockAxis("ct", "T", preferred=256, align=8,
+                                   exact=True),
+                registry.BlockAxis("bb", "B", preferred=8, align=8),
+                registry.BlockAxis("bn", "N", preferred=512, align=128)),
+    dims_of=lambda current, tau, v0: {"T": current.shape[0],
+                                      "B": current.shape[1],
+                                      "N": current.shape[2]},
+    candidates=({"ct": 128, "bn": 256}, {"ct": 128, "bn": 512},
+                {"ct": 256, "bn": 256}, {"ct": 512, "bn": 512}),
+    make_inputs=_make_inputs,
+    diff_argnums=(0, 1, 2),
+    tol=1e-4,
+))

@@ -1,9 +1,10 @@
-"""Public entry point for the DIFF recurrence with automatic dispatch.
+"""Public entry point for the DIFF recurrence, dispatched via the registry.
 
-`linrec(a, x, h0)` pads to kernel tiles and runs the Pallas kernel on TPU
-(interpret mode off-TPU when `force_pallas`), or the associative-scan
-reference otherwise. A custom VJP makes the kernel differentiable with the
-well-known linear-recurrence adjoint:
+`linrec(a, x, h0)` routes through `repro.kernels.registry`: the reference
+associative scan by default, the Pallas kernel when forced (interpret mode
+off-TPU), with block shapes resolved from the tuning cache. A custom VJP
+makes the kernel differentiable with the well-known linear-recurrence
+adjoint:
 
     forward : y_t = a_t y_{t-1} + x_t
     backward: dL/dx_t = g_t + a_{t+1} dL/dx_{t+1}   (reverse linrec!)
@@ -21,18 +22,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import interpret_mode, pad_axis, pick_block
+from repro.kernels import registry
+from repro.kernels.common import pad_axis
 from repro.kernels.linrec.kernel import linrec_pallas
 from repro.kernels.linrec.ref import linrec_ref
 
 
-def _linrec_fwd_impl(a, x, h0, force_pallas: bool):
-    if not force_pallas:
-        return linrec_ref(a, x, h0)
+def _pallas_impl(a, x, h0, *, blocks, interpret):
     T, B, D = x.shape
-    ct = pick_block(T, 256, 8)
-    bb = pick_block(B, 8, 8)
-    bd = pick_block(D, 512, 128)
+    ct, bb, bd = blocks["ct"], blocks["bb"], blocks["bd"]
     a_p, _ = pad_axis(a, 0, ct, value=1.0)
     x_p, _ = pad_axis(x, 0, ct)
     a_p, _ = pad_axis(a_p, 1, bb, value=1.0)
@@ -42,8 +40,12 @@ def _linrec_fwd_impl(a, x, h0, force_pallas: bool):
     x_p, _ = pad_axis(x_p, 2, bd)
     h0_p, _ = pad_axis(h0_p, 1, bd)
     y, hT = linrec_pallas(a_p, x_p, h0_p, ct=ct, bb=bb, bd=bd,
-                          interpret=interpret_mode())
+                          interpret=interpret)
     return y[:T, :B, :D], hT[:B, :D]
+
+
+def _linrec_fwd_impl(a, x, h0, force_pallas: bool):
+    return registry.dispatch("linrec", (a, x, h0), force_pallas=force_pallas)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
@@ -76,3 +78,31 @@ def _bwd(force_pallas, res, cts):
 
 
 linrec.defvjp(_fwd, _bwd)
+
+
+def _make_inputs(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    T, B, D = 24, 3, 136                      # non-multiples exercise padding
+    a = jax.random.uniform(k1, (T, B, D), jnp.float32, 0.5, 0.99)
+    x = jax.random.normal(k2, (T, B, D), jnp.float32)
+    h0 = jax.random.normal(k3, (B, D), jnp.float32)
+    return a, x, h0
+
+
+registry.register(registry.KernelSpec(
+    name="linrec",
+    ref=linrec_ref,
+    pallas=_pallas_impl,
+    apply=lambda args, force=False: linrec(*args, force),
+    block_axes=(registry.BlockAxis("ct", "T", preferred=256, align=8),
+                registry.BlockAxis("bb", "B", preferred=8, align=8),
+                registry.BlockAxis("bd", "D", preferred=512, align=128)),
+    dims_of=lambda a, x, h0: {"T": x.shape[0], "B": x.shape[1],
+                              "D": x.shape[2]},
+    candidates=({"ct": 128, "bd": 256}, {"ct": 128, "bd": 512},
+                {"ct": 256, "bd": 256}, {"ct": 512, "bd": 512},
+                {"ct": 256, "bb": 16}),
+    make_inputs=_make_inputs,
+    diff_argnums=(0, 1, 2),
+    tol=1e-4,
+))

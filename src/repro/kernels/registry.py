@@ -1,0 +1,222 @@
+"""Unified kernel registry: one registration + dispatch point for every
+Pallas kernel family.
+
+TaiBai's headline property is *programmability* — a multi-granularity
+instruction set where LIF dynamics, plasticity, and dense attention run on
+one substrate. The TPU-side analogue is this registry: each kernel family
+registers its pure-jnp reference, its Pallas implementation, and a tunable
+block specification ONCE, and every cross-cutting concern lives here
+instead of being copy-pasted per family:
+
+  * ref-vs-pallas dispatch policy (`force_pallas` arg, `REPRO_KERNEL_IMPL`
+    env, interpret-mode fallback off-TPU),
+  * block-shape resolution (per-axis alignment fitting, tuned-cache lookup
+    via `repro.kernels.tuning`, explicit per-call overrides),
+  * enumeration for the parity harness (`repro.kernels.parity`) and the
+    autotuner / benchmarks.
+
+Registering a new kernel means building one `KernelSpec` and calling
+`register()` at the bottom of its `ops.py` — see any existing family for
+the pattern. The spec carries everything the generic machinery needs:
+
+    register(KernelSpec(
+        name="mykern",
+        ref=mykern_ref,                  # pure-jnp oracle
+        pallas=_pallas_impl,             # (*args, blocks=, interpret=, **static)
+        apply=lambda args, force=False: mykern(*args, force),
+        block_axes=(BlockAxis("bt", "T", preferred=256, align=8), ...),
+        dims_of=lambda *args: {"T": args[0].shape[0], ...},
+        candidates=({"bt": 128}, {"bt": 256}),   # autotune sweep
+        make_inputs=_make_inputs,        # key -> args (parity + tuning)
+        diff_argnums=(0, 1),             # () => forward-only parity
+        tol=1e-4,
+    ))
+
+Environment knobs:
+  REPRO_KERNEL_IMPL     = ref | pallas | auto   (auto: ref unless forced)
+  REPRO_PALLAS_INTERPRET= 1 | 0                 (force interpret on/off)
+  REPRO_TUNING_CACHE    = path to the JSON tuning cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.kernels.common import on_tpu
+
+
+# ---------------------------------------------------------------------------
+# dispatch policy
+# ---------------------------------------------------------------------------
+
+
+def interpret_mode() -> bool:
+    """Pallas kernels execute in interpret mode off-TPU (CPU container)."""
+    forced = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if forced is not None:
+        return forced == "1"
+    return not on_tpu()
+
+
+def use_pallas(force_pallas: bool = False) -> bool:
+    """Resolve the ref-vs-pallas choice for one call.
+
+    `force_pallas=True` (the per-call/config escape hatch) always wins;
+    otherwise `REPRO_KERNEL_IMPL` picks globally, and `auto` (the default)
+    keeps the conservative seed semantics: the XLA reference path.
+    """
+    if force_pallas:
+        return True
+    mode = os.environ.get("REPRO_KERNEL_IMPL", "auto")
+    if mode not in ("ref", "pallas", "auto"):
+        raise ValueError(f"REPRO_KERNEL_IMPL={mode!r}: "
+                         "expected 'ref', 'pallas', or 'auto'")
+    if mode == "pallas":
+        return True
+    return False  # ref, or auto: reference unless explicitly forced
+
+
+# ---------------------------------------------------------------------------
+# block-shape resolution
+# ---------------------------------------------------------------------------
+
+
+def fit_block(n: int, preferred: int, align: int) -> int:
+    """Largest block <= preferred that is a multiple of `align` and covers n
+    evenly after padding; falls back to n rounded up to `align` when small."""
+    if n <= preferred:
+        return max(align, -(-n // align) * align)
+    return preferred
+
+
+def exact_block(n: int, preferred: int) -> int:
+    """Largest block <= preferred that divides n exactly (no padding).
+
+    Required for axes that chain state across grid steps (e.g. the LIF time
+    axis): zero-padding such an axis would run extra dynamics steps and
+    corrupt the carried state, so the block must tile the axis exactly.
+    Worst case (prime n > preferred) degrades to 1 — correct, just serial.
+    """
+    b = min(max(1, n), max(1, preferred))
+    while n % b:
+        b -= 1
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockAxis:
+    """One tunable block dimension of a kernel's grid.
+
+    `name` is the key in the blocks dict handed to the Pallas wrapper;
+    `dim` names the logical tensor dimension (as produced by
+    `KernelSpec.dims_of`) this block tiles; `preferred`/`align` reproduce
+    the family's hand-picked defaults and TPU layout constraints.
+    """
+
+    name: str
+    dim: str
+    preferred: int
+    align: int
+    exact: bool = False  # block must divide the dim (state-chained axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Everything the registry needs to dispatch, tune, and verify a kernel."""
+
+    name: str
+    ref: Callable[..., Any]
+    pallas: Callable[..., Any]
+    apply: Callable[..., Any]
+    block_axes: Tuple[BlockAxis, ...]
+    dims_of: Callable[..., Dict[str, int]]
+    candidates: Tuple[Mapping[str, int], ...] = ()
+    make_inputs: Optional[Callable[..., tuple]] = None
+    diff_argnums: Tuple[int, ...] = ()
+    tol: float = 1e-4
+
+    def resolve_blocks(self, dims: Mapping[str, int],
+                       overrides: Optional[Mapping[str, int]] = None,
+                       use_cache: bool = True) -> Dict[str, int]:
+        """Overrides > tuned cache > spec preferred, each fitted to `dims`."""
+        tuned: Mapping[str, int] = {}
+        if use_cache:
+            from repro.kernels import tuning  # local: avoid import cycle
+            tuned = tuning.lookup_tuned(self.name, dims) or {}
+        overrides = overrides or {}
+        blocks = {}
+        for ax in self.block_axes:
+            pref = int(overrides.get(ax.name, tuned.get(ax.name,
+                                                        ax.preferred)))
+            if ax.exact:
+                blocks[ax.name] = exact_block(dims[ax.dim], pref)
+            else:
+                blocks[ax.name] = fit_block(dims[ax.dim], pref, ax.align)
+        return blocks
+
+
+# ---------------------------------------------------------------------------
+# the registry proper
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, KernelSpec] = {}
+
+_KERNEL_MODULES = (
+    "repro.kernels.linrec.ops",
+    "repro.kernels.lif.ops",
+    "repro.kernels.spikemm.ops",
+    "repro.kernels.attention.ops",
+    "repro.kernels.stdp.ops",
+)
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    """Idempotent by name: re-importing an ops module re-registers itself."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> KernelSpec:
+    if name not in _REGISTRY:
+        ensure_registered()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def names() -> Tuple[str, ...]:
+    ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def ensure_registered() -> None:
+    """Import every kernel family so its module-level register() has run."""
+    import importlib
+
+    for mod in _KERNEL_MODULES:
+        importlib.import_module(mod)
+
+
+def dispatch(name: str, args: Sequence[Any], force_pallas: bool = False,
+             overrides: Optional[Mapping[str, int]] = None, **static) -> Any:
+    """Run kernel `name` on `args` through the unified policy.
+
+    `static` kwargs (thresholds, causal flags, learning rates, ...) are
+    forwarded verbatim to whichever implementation wins. `overrides` pins
+    individual block sizes, bypassing the tuning cache for those axes.
+    """
+    spec = get(name)
+    if not use_pallas(force_pallas):
+        return spec.ref(*args, **static)
+    blocks = spec.resolve_blocks(spec.dims_of(*args), overrides)
+    return spec.pallas(*args, blocks=blocks, interpret=interpret_mode(),
+                       **static)
+
+
+__all__ = ["BlockAxis", "KernelSpec", "register", "get", "names",
+           "ensure_registered", "dispatch", "fit_block", "exact_block",
+           "use_pallas", "interpret_mode"]

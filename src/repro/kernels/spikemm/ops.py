@@ -1,10 +1,14 @@
-"""Public spikemm entry: occupancy computation + dispatch + straight-through
-gradient.
+"""Public spikemm entry: occupancy computation + registry dispatch +
+straight-through gradient.
 
 The forward skips silent blocks; the backward uses the dense oracle
 gradients (dL/dW = s^T g gated by the same occupancy is an *exact* identity,
 since silent rows contribute zero — we exploit that: the dW matmul is also
 event-gated, which is the paper's point that learning, too, is event-driven).
+
+Block sizes: `bm`/`bk`/`bn` default to None, meaning the registry resolves
+them (tuning cache, then the spec defaults 128/512/512); an explicit int
+pins that axis for the call.
 """
 
 from __future__ import annotations
@@ -14,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import interpret_mode, pad_axis
+from repro.kernels import registry
+from repro.kernels.common import pad_axis
 from repro.kernels.spikemm.kernel import spikemm_pallas
 from repro.kernels.spikemm.ref import spikemm_ref
 
@@ -34,26 +39,36 @@ def occupancy_fraction(spikes: jax.Array, bm: int = 128, bk: int = 512):
     return jnp.mean(f.astype(jnp.float32))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def spikemm(spikes: jax.Array, w: jax.Array, bm: int = 128, bk: int = 512,
-            bn: int = 512, force_pallas: bool = False) -> jax.Array:
-    """Event-gated spikes @ w. spikes: (M, K) 0/1; w: (K, N)."""
-    return _impl(spikes, w, bm, bk, bn, force_pallas)
-
-
-def _impl(spikes, w, bm, bk, bn, force_pallas):
-    if not force_pallas:
-        return spikemm_ref(spikes, w.astype(spikes.dtype))
+def _pallas_impl(spikes, w, *, blocks, interpret):
     M, K = spikes.shape
     N = w.shape[1]
+    bm, bk, bn = blocks["bm"], blocks["bk"], blocks["bn"]
     s_p, _ = pad_axis(spikes, 0, bm)
     s_p, _ = pad_axis(s_p, 1, bk)
     w_p, _ = pad_axis(w.astype(spikes.dtype), 0, bk)
     w_p, _ = pad_axis(w_p, 1, bn)
     flags = block_occupancy(s_p, bm, bk)
     out = spikemm_pallas(flags, s_p, w_p, bm=bm, bk=bk, bn=bn,
-                         interpret=interpret_mode())
+                         interpret=interpret)
     return out[:M, :N]
+
+
+def _ref_impl(spikes, w):
+    return spikemm_ref(spikes, w.astype(spikes.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def spikemm(spikes: jax.Array, w: jax.Array, bm: int = None, bk: int = None,
+            bn: int = None, force_pallas: bool = False) -> jax.Array:
+    """Event-gated spikes @ w. spikes: (M, K) 0/1; w: (K, N)."""
+    return _impl(spikes, w, bm, bk, bn, force_pallas)
+
+
+def _impl(spikes, w, bm, bk, bn, force_pallas):
+    overrides = {k: v for k, v in (("bm", bm), ("bk", bk), ("bn", bn))
+                 if v is not None}
+    return registry.dispatch("spikemm", (spikes, w),
+                             force_pallas=force_pallas, overrides=overrides)
 
 
 def _fwd(spikes, w, bm, bk, bn, force_pallas):
@@ -71,3 +86,29 @@ def _bwd(bm, bk, bn, force_pallas, res, g):
 
 
 spikemm.defvjp(_fwd, _bwd)
+
+
+def _make_inputs(key):
+    k1, k2 = jax.random.split(key)
+    M, K, N = 100, 300, 200                   # non-multiples exercise padding
+    spikes = (jax.random.uniform(k1, (M, K)) < 0.13).astype(jnp.float32)
+    w = jax.random.normal(k2, (K, N), jnp.float32)
+    return spikes, w
+
+
+registry.register(registry.KernelSpec(
+    name="spikemm",
+    ref=_ref_impl,
+    pallas=_pallas_impl,
+    apply=lambda args, force=False: spikemm(*args, None, None, None, force),
+    block_axes=(registry.BlockAxis("bm", "M", preferred=128, align=8),
+                registry.BlockAxis("bk", "K", preferred=512, align=128),
+                registry.BlockAxis("bn", "N", preferred=512, align=128)),
+    dims_of=lambda spikes, w: {"M": spikes.shape[0], "K": spikes.shape[1],
+                               "N": w.shape[1]},
+    candidates=({"bm": 128, "bk": 256}, {"bm": 128, "bk": 512},
+                {"bm": 256, "bk": 512}, {"bm": 128, "bk": 512, "bn": 256}),
+    make_inputs=_make_inputs,
+    diff_argnums=(0, 1),
+    tol=1e-4,
+))

@@ -1,30 +1,24 @@
-"""Public STDP-update entry point: padding + dispatch (Pallas on TPU /
-interpret, einsum reference otherwise). Plugged into core/plasticity via
-`stdp_step(..., use_kernel=True)`."""
+"""Public STDP-update entry point, dispatched via the kernel registry
+(Pallas on TPU / interpret, einsum reference otherwise). Plugged into
+core/plasticity via `stdp_step(..., use_kernel=True)`. The update is a
+weight write, not a differentiable op, so the spec registers forward-only
+parity (`diff_argnums=()`)."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import interpret_mode, pad_axis, pick_block
+from repro.kernels import registry
+from repro.kernels.common import pad_axis
 from repro.kernels.stdp.kernel import stdp_pallas
 from repro.kernels.stdp.ref import stdp_update_ref
 
 
-def stdp_update(x_pre: jax.Array, s_post: jax.Array, s_pre: jax.Array,
-                x_post: jax.Array, w: jax.Array, *,
-                a_plus: float = 0.01, a_minus: float = 0.012,
-                w_min: float = -1.0, w_max: float = 1.0,
-                force_pallas: bool = False) -> jax.Array:
-    """One STDP weight step. Traces/spikes: (B, N_*); w: (N_pre, N_post)."""
-    if not force_pallas:
-        return stdp_update_ref(x_pre, s_post, s_pre, x_post, w,
-                               a_plus=a_plus, a_minus=a_minus,
-                               w_min=w_min, w_max=w_max)
+def _pallas_impl(x_pre, s_post, s_pre, x_post, w, *, blocks, interpret,
+                 a_plus=0.01, a_minus=0.012, w_min=-1.0, w_max=1.0):
     M, N = w.shape
-    bm = pick_block(M, 256, 8)
-    bn = pick_block(N, 256, 128)
+    bm, bn = blocks["bm"], blocks["bn"]
     xpre_p, _ = pad_axis(x_pre, 1, bm)
     spre_p, _ = pad_axis(s_pre, 1, bm)
     spost_p, _ = pad_axis(s_post, 1, bn)
@@ -33,5 +27,45 @@ def stdp_update(x_pre: jax.Array, s_post: jax.Array, s_pre: jax.Array,
     w_p, _ = pad_axis(w_p, 1, bn)
     out = stdp_pallas(xpre_p, spost_p, spre_p, xpost_p, w_p,
                       a_plus=a_plus, a_minus=a_minus, w_min=w_min,
-                      w_max=w_max, bm=bm, bn=bn, interpret=interpret_mode())
+                      w_max=w_max, bm=bm, bn=bn, interpret=interpret)
     return out[:M, :N]
+
+
+def stdp_update(x_pre: jax.Array, s_post: jax.Array, s_pre: jax.Array,
+                x_post: jax.Array, w: jax.Array, *,
+                a_plus: float = 0.01, a_minus: float = 0.012,
+                w_min: float = -1.0, w_max: float = 1.0,
+                force_pallas: bool = False) -> jax.Array:
+    """One STDP weight step. Traces/spikes: (B, N_*); w: (N_pre, N_post)."""
+    return registry.dispatch("stdp", (x_pre, s_post, s_pre, x_post, w),
+                             force_pallas=force_pallas,
+                             a_plus=a_plus, a_minus=a_minus,
+                             w_min=w_min, w_max=w_max)
+
+
+def _make_inputs(key):
+    ks = jax.random.split(key, 5)
+    B, M, N = 6, 130, 140                     # non-multiples exercise padding
+    x_pre = jax.random.uniform(ks[0], (B, M), jnp.float32)
+    x_post = jax.random.uniform(ks[1], (B, N), jnp.float32)
+    s_pre = (jax.random.uniform(ks[2], (B, M)) < 0.2).astype(jnp.float32)
+    s_post = (jax.random.uniform(ks[3], (B, N)) < 0.2).astype(jnp.float32)
+    w = 0.5 * jax.random.normal(ks[4], (M, N), jnp.float32)
+    return x_pre, s_post, s_pre, x_post, w
+
+
+registry.register(registry.KernelSpec(
+    name="stdp",
+    ref=stdp_update_ref,
+    pallas=_pallas_impl,
+    apply=lambda args, force=False: stdp_update(*args, force_pallas=force),
+    block_axes=(registry.BlockAxis("bm", "M", preferred=256, align=8),
+                registry.BlockAxis("bn", "N", preferred=256, align=128)),
+    dims_of=lambda x_pre, s_post, s_pre, x_post, w: {"M": w.shape[0],
+                                                     "N": w.shape[1]},
+    candidates=({"bm": 128, "bn": 128}, {"bm": 128, "bn": 256},
+                {"bm": 256, "bn": 128}, {"bm": 512, "bn": 256}),
+    make_inputs=_make_inputs,
+    diff_argnums=(),                          # weight write: forward-only
+    tol=1e-4,
+))

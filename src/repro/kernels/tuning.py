@@ -1,0 +1,211 @@
+"""Autotuner + persistent tuning cache for registered kernels.
+
+Block shapes that are optimal for one (shape, backend) pair are rarely
+optimal for another — VMEM working set, grid shape, and the serial-in-time
+chunk trade all move. Instead of hand-picking per call site, the autotuner
+sweeps each kernel's declared candidate block configs on representative
+inputs, times the jitted Pallas path, and persists the winner to a JSON
+cache keyed by
+
+    (kernel name, jax backend, shape bucket)
+
+where the shape bucket rounds every logical dimension up to a power of two
+("B8_D512_T256") so one tuning run covers a neighborhood of shapes.
+`registry.KernelSpec.resolve_blocks` consults the cache on every dispatch;
+a cache miss silently falls back to the spec's hand-tuned defaults, so
+tuning is always an optimization, never a correctness dependency.
+
+Cache location: `$REPRO_TUNING_CACHE`, else `~/.cache/repro/kernel_tuning.json`.
+`benchmarks/bench_kernels.py` exercises the sweep and archives the winners.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+
+from repro.kernels import registry
+
+_ENV_CACHE = "REPRO_TUNING_CACHE"
+_SCHEMA_VERSION = 1
+
+
+def default_cache_path() -> str:
+    return os.environ.get(
+        _ENV_CACHE,
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "kernel_tuning.json"))
+
+
+def shape_bucket(dims: Mapping[str, int]) -> str:
+    """Canonical bucket key: dims sorted by name, sizes rounded up to pow2."""
+    parts = []
+    for k in sorted(dims):
+        n = max(1, int(dims[k]))
+        parts.append(f"{k}{1 << (n - 1).bit_length()}")
+    return "_".join(parts)
+
+
+class TuningCache:
+    """JSON-backed map: kernel|backend|bucket -> winning block config."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._data: Optional[Dict[str, Any]] = None
+
+    def _load(self) -> Dict[str, Any]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    raw = json.load(f)
+                if raw.get("version") != _SCHEMA_VERSION:
+                    raw = {"version": _SCHEMA_VERSION, "entries": {}}
+            except (OSError, ValueError):
+                raw = {"version": _SCHEMA_VERSION, "entries": {}}
+            self._data = raw
+        return self._data
+
+    @staticmethod
+    def _key(kernel: str, backend: str, bucket: str) -> str:
+        return f"{kernel}|{backend}|{bucket}"
+
+    def lookup(self, kernel: str, backend: str,
+               bucket: str) -> Optional[Dict[str, int]]:
+        entry = self._load()["entries"].get(self._key(kernel, backend, bucket))
+        if entry is None:
+            return None
+        return {k: int(v) for k, v in entry["blocks"].items()}
+
+    def put(self, kernel: str, backend: str, bucket: str,
+            blocks: Mapping[str, int],
+            stats: Optional[Mapping[str, Any]] = None) -> None:
+        data = self._load()
+        data["entries"][self._key(kernel, backend, bucket)] = {
+            "blocks": dict(blocks), "stats": dict(stats or {})}
+
+    def save(self) -> str:
+        data = self._load()
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+        return self.path
+
+    def __len__(self) -> int:
+        return len(self._load()["entries"])
+
+
+_DEFAULT_CACHE: Optional[TuningCache] = None
+
+
+def default_cache() -> TuningCache:
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None or _DEFAULT_CACHE.path != default_cache_path():
+        _DEFAULT_CACHE = TuningCache()
+    return _DEFAULT_CACHE
+
+
+def lookup_tuned(kernel: str,
+                 dims: Mapping[str, int]) -> Optional[Dict[str, int]]:
+    """Dispatch-time hook used by `KernelSpec.resolve_blocks`."""
+    try:
+        return default_cache().lookup(kernel, jax.default_backend(),
+                                      shape_bucket(dims))
+    except Exception:  # a corrupt cache must never break dispatch
+        return None
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+# ---------------------------------------------------------------------------
+
+
+def _time_once(fn, args) -> float:
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def autotune(name: str, args: Optional[tuple] = None, *,
+             cache: Optional[TuningCache] = None, repeats: int = 3,
+             save: bool = True, **static) -> Tuple[Dict[str, int], Dict]:
+    """Sweep `spec.candidates` (plus the spec defaults) for kernel `name`.
+
+    Returns (winning blocks, report). The winner is persisted to `cache`
+    (default: the process-wide cache) under the input's shape bucket, so
+    subsequent `registry.dispatch` calls on same-bucket shapes pick it up.
+    """
+    spec = registry.get(name)
+    if args is None:
+        if spec.make_inputs is None:
+            raise ValueError(f"kernel {name!r} has no make_inputs; "
+                             "pass explicit args to autotune()")
+        args = spec.make_inputs(jax.random.PRNGKey(0))
+    if cache is None:  # NOT `or`: an empty TuningCache is falsy (__len__)
+        cache = default_cache()
+    dims = spec.dims_of(*args)
+    bucket = shape_bucket(dims)
+    backend = jax.default_backend()
+    interpret = registry.interpret_mode()
+
+    # Fit every candidate to the actual dims, dedupe, and always include the
+    # spec's hand-tuned defaults as the baseline candidate.
+    seen, fitted = set(), []
+    for cand in ({},) + tuple(spec.candidates):
+        blocks = spec.resolve_blocks(dims, overrides=cand, use_cache=False)
+        key = tuple(sorted(blocks.items()))
+        if key not in seen:
+            seen.add(key)
+            fitted.append(blocks)
+
+    report: Dict[str, Any] = {"kernel": name, "backend": backend,
+                              "bucket": bucket, "timings": []}
+    best_blocks, best_t = None, float("inf")
+    for blocks in fitted:
+        fn = jax.jit(lambda *a, _b=blocks: spec.pallas(
+            *a, blocks=_b, interpret=interpret, **static))
+        try:
+            compile_s = _time_once(fn, args)           # includes compilation
+            runs = [_time_once(fn, args) for _ in range(repeats)]
+        except Exception as e:  # an infeasible tile is a loser, not a crash
+            report["timings"].append({"blocks": blocks, "error": repr(e)})
+            continue
+        t = min(runs)
+        report["timings"].append({"blocks": blocks, "best_s": t,
+                                  "runs_s": runs, "compile_s": compile_s})
+        if t < best_t:
+            best_blocks, best_t = blocks, t
+    if best_blocks is None:
+        raise RuntimeError(f"autotune({name!r}): every candidate failed: "
+                           f"{report['timings']}")
+    report["winner"] = {"blocks": best_blocks, "best_s": best_t}
+    cache.put(name, backend, bucket, best_blocks,
+              stats={"best_s": best_t, "n_candidates": len(fitted)})
+    if save:
+        cache.save()
+    return best_blocks, report
+
+
+def autotune_all(*, cache: Optional[TuningCache] = None, repeats: int = 3,
+                 save: bool = True) -> Dict[str, Dict]:
+    """Tune every registered kernel on its canonical inputs."""
+    registry.ensure_registered()
+    reports = {}
+    for name in registry.names():
+        if registry.get(name).make_inputs is None:
+            continue
+        _, reports[name] = autotune(name, cache=cache, repeats=repeats,
+                                    save=save)
+    return reports
+
+
+__all__ = ["TuningCache", "autotune", "autotune_all", "default_cache",
+           "default_cache_path", "lookup_tuned", "shape_bucket"]

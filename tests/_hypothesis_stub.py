@@ -1,0 +1,153 @@
+"""Minimal, deterministic stand-in for `hypothesis`, used ONLY when the
+real package is not installed (this container bakes the JAX toolchain but
+not dev extras; CI installs real hypothesis from requirements-dev.txt).
+
+`tests/conftest.py` installs this module into `sys.modules["hypothesis"]`
+before collection, so `from hypothesis import given, settings, strategies`
+works unchanged. Coverage semantics: each `@given` test runs
+`max_examples` times with draws that visit the strategy's boundary values
+first (min, max, midpoint / min_size, max_size) and then deterministic
+pseudo-random interiors seeded by the test's qualified name — no shrinking,
+no database, but reproducible across runs and processes.
+
+Only the strategy surface this repo uses is implemented: `integers`,
+`floats(allow_nan=)`, `lists(min_size=, max_size=)`, `booleans`,
+`sampled_from`.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+
+class _Strategy:
+    """A strategy draws example #i deterministically from an rng."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_at(self, rng: random.Random, i: int):
+        return self._draw(rng, i)
+
+    def map(self, fn):
+        return _Strategy(lambda rng, i: fn(self._draw(rng, i)))
+
+    def filter(self, pred, _tries: int = 100):
+        def draw(rng, i):
+            for _ in range(_tries):
+                v = self._draw(rng, i)
+                if pred(v):
+                    return v
+                i = None  # fall back to random draws after the edge miss
+            raise ValueError("filter predicate rejected every draw")
+        return _Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    edges = (min_value, max_value, (min_value + max_value) // 2)
+
+    def draw(rng, i):
+        if i is not None and i < len(edges):
+            return edges[i]
+        return rng.randint(min_value, max_value)
+    return _Strategy(draw)
+
+
+def floats(min_value: float, max_value: float, *, allow_nan: bool = False,
+           allow_infinity: bool = False) -> _Strategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite here
+    edges = (min_value, max_value, 0.5 * (min_value + max_value))
+
+    def draw(rng, i):
+        if i is not None and i < len(edges):
+            return edges[i]
+        return rng.uniform(min_value, max_value)
+    return _Strategy(draw)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng, i: (i % 2 == 0) if i is not None and i < 2
+                     else rng.random() < 0.5)
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng, i: options[i % len(options)]
+                     if i is not None and i < len(options)
+                     else rng.choice(options))
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng, i):
+        if i == 0:
+            size = min_size
+        elif i == 1:
+            size = max_size
+        else:
+            size = rng.randint(min_size, max_size)
+        # element edge-draws only for the first couple of examples; interiors
+        # otherwise, so lists are not all-constant
+        return [elements.example_at(rng, i if i is not None and i < 2 and
+                                    j == 0 else None)
+                for j in range(size)]
+    return _Strategy(draw)
+
+
+class settings:
+    """Decorator recording run parameters; `deadline`/database are ignored."""
+
+    def __init__(self, max_examples: int = 10, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_settings = self
+        return fn
+
+
+def given(*strategies, **kw_strategies):
+    if kw_strategies:
+        raise NotImplementedError("stub @given supports positional "
+                                  "strategies only")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kwargs):
+            cfg = getattr(wrapper, "_stub_settings", None)
+            n = cfg.max_examples if cfg else 10
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                vals = [s.example_at(rng, i) for s in strategies]
+                try:
+                    fn(*fixture_args, *vals, **fixture_kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__qualname__}: falsified on example #{i} "
+                        f"args={vals!r}") from e
+        # hide the strategy-filled params from pytest's fixture resolution
+        params = list(inspect.signature(fn).parameters.values())
+        wrapper.__signature__ = inspect.Signature(params[:-len(strategies)]
+                                                  if strategies else params)
+        del wrapper.__wrapped__
+        return wrapper
+    return decorate
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.booleans = booleans
+strategies.sampled_from = sampled_from
+strategies.lists = lists
+
+HealthCheck = types.SimpleNamespace(too_slow="too_slow",
+                                    filter_too_much="filter_too_much",
+                                    data_too_large="data_too_large")
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+__version__ = "0.0.0-repro-stub"

@@ -36,6 +36,7 @@ def test_forward_shapes_and_finite(arch):
         assert float(aux["lb_loss"]) >= 1.0 - 1e-3   # >= perfect balance
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_no_nans(arch):
     cfg = get_smoke_config(arch).replace(dtype="float32")
@@ -48,6 +49,7 @@ def test_train_step_no_nans(arch):
     assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2-1.5b", "rwkv6-3b", "zamba2-1.2b",
                                   "olmoe-1b-7b", "whisper-small"])
 def test_decode_consistent_with_forward(arch):

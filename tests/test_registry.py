@@ -1,0 +1,208 @@
+"""Kernel-registry tests: parity harness over every registered kernel,
+block resolution, dispatch policy, and the tuning-cache round trip."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import parity, registry, tuning
+
+registry.ensure_registered()
+ALL_KERNELS = registry.names()
+
+
+# ---------------------------------------------------------------------------
+# registration + parity (the CI backbone: every kernel, forward AND VJP)
+# ---------------------------------------------------------------------------
+
+
+def test_all_families_registered():
+    assert set(ALL_KERNELS) == {"linrec", "lif", "spikemm", "attention",
+                                "stdp"}
+    for name in ALL_KERNELS:
+        spec = registry.get(name)
+        assert spec.make_inputs is not None, name
+        assert spec.block_axes, name
+        assert spec.candidates, name
+
+
+@pytest.mark.parametrize("name", ALL_KERNELS)
+def test_parity_forward_and_vjp(name):
+    report = parity.check_kernel(name)
+    assert report["forward_max_err"] <= registry.get(name).tol
+    if registry.get(name).diff_argnums:
+        assert "vjp_max_err" in report
+
+
+def test_parity_check_all_covers_every_kernel():
+    reports = parity.check_all()
+    assert set(reports) == set(ALL_KERNELS)
+
+
+@pytest.mark.tpu
+@pytest.mark.parametrize("name", ALL_KERNELS)
+def test_parity_real_mosaic(name):
+    """Same harness, real compiled kernels (auto-skipped off-TPU)."""
+    assert not registry.interpret_mode()
+    parity.check_kernel(name)
+
+
+def test_ops_files_have_no_direct_dispatch_logic():
+    """Acceptance guard: block sizing + interpret policy live ONLY in the
+    registry; a new kernel must not reintroduce per-family copies."""
+    import repro.kernels as kpkg
+
+    root = os.path.dirname(kpkg.__file__)
+    offenders = []
+    for fam in os.listdir(root):
+        ops = os.path.join(root, fam, "ops.py")
+        if not os.path.isfile(ops):
+            continue
+        src = open(ops).read()
+        for banned in ("pick_block", "interpret_mode"):
+            if banned in src:
+                offenders.append((fam, banned))
+    assert not offenders, offenders
+
+
+# ---------------------------------------------------------------------------
+# block resolution
+# ---------------------------------------------------------------------------
+
+
+def test_fit_block_alignment_and_cap():
+    assert registry.fit_block(100, 256, 8) == 104    # round up to align
+    assert registry.fit_block(1000, 256, 8) == 256   # capped at preferred
+    assert registry.fit_block(3, 256, 128) == 128    # floor at align
+
+
+def test_exact_block_divides():
+    assert registry.exact_block(20, 256) == 20       # whole axis fits
+    assert registry.exact_block(1000, 256) == 250    # largest divisor <= pref
+    assert registry.exact_block(97, 64) == 1         # prime: serial fallback
+    for n, pref in [(20, 8), (256, 256), (1000, 256), (7, 512)]:
+        b = registry.exact_block(n, pref)
+        assert n % b == 0 and 1 <= b <= max(n, 1)
+
+
+def test_lif_time_axis_never_padded():
+    """Regression for the bug the parity harness caught: zero-padding the
+    LIF time axis runs extra decay steps and corrupts v_final. The ct axis
+    is `exact`, so any T (incl. primes) must agree with the reference."""
+    from repro.kernels.lif.ops import lif_scan
+    from repro.kernels.lif.ref import lif_scan_ref
+
+    for T in (20, 23, 37):
+        k = jax.random.PRNGKey(T)
+        cur = 0.6 * jax.random.normal(k, (T, 2, 130))
+        tau = jnp.full((130,), 0.9)
+        v0 = jnp.zeros((2, 130))
+        s_ref, v_ref = lif_scan_ref(cur, tau, v0)
+        s_k, v_k = lif_scan(cur, tau, v0, 1.0, "rectangle", 1.0, True)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_ref))
+        np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_policy_env(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "pallas")
+    assert registry.use_pallas(False)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "ref")
+    assert not registry.use_pallas(False)
+    assert registry.use_pallas(True)          # explicit force always wins
+    monkeypatch.delenv("REPRO_KERNEL_IMPL")
+    assert not registry.use_pallas(False)     # auto: conservative default
+
+
+# ---------------------------------------------------------------------------
+# tuning cache
+# ---------------------------------------------------------------------------
+
+
+def test_shape_bucket_pow2_and_canonical():
+    assert tuning.shape_bucket({"T": 100, "B": 8}) == "B8_T128"
+    assert tuning.shape_bucket({"B": 8, "T": 100}) == "B8_T128"  # order-free
+    assert tuning.shape_bucket({"D": 1}) == "D1"
+
+
+def test_tuning_cache_round_trip(tmp_path):
+    path = str(tmp_path / "cache.json")
+    cache = tuning.TuningCache(path)
+    assert cache.lookup("linrec", "cpu", "B8_T128") is None
+    cache.put("linrec", "cpu", "B8_T128", {"ct": 128, "bb": 8, "bd": 256},
+              stats={"best_s": 1e-3})
+    cache.save()
+
+    reloaded = tuning.TuningCache(path)
+    assert reloaded.lookup("linrec", "cpu", "B8_T128") == {
+        "ct": 128, "bb": 8, "bd": 256}
+    assert reloaded.lookup("linrec", "cpu", "B8_T256") is None
+    assert len(reloaded) == 1
+    raw = json.load(open(path))
+    assert raw["version"] == 1
+
+
+def test_tuning_cache_corrupt_file_is_ignored(tmp_path):
+    path = str(tmp_path / "cache.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    cache = tuning.TuningCache(path)
+    assert cache.lookup("lif", "cpu", "X1") is None
+    cache.put("lif", "cpu", "X1", {"ct": 8})
+    cache.save()
+    assert tuning.TuningCache(path).lookup("lif", "cpu", "X1") == {"ct": 8}
+
+
+def test_autotune_persists_winner_and_dispatch_uses_it(tmp_path,
+                                                       monkeypatch):
+    path = str(tmp_path / "tuned.json")
+    monkeypatch.setenv("REPRO_TUNING_CACHE", path)
+
+    spec = registry.get("linrec")
+    args = spec.make_inputs(jax.random.PRNGKey(0))
+    dims = spec.dims_of(*args)
+
+    blocks, report = tuning.autotune("linrec", args, repeats=1)
+    assert os.path.exists(path)
+    assert report["winner"]["blocks"] == blocks
+    assert {t["blocks"]["ct"] for t in report["timings"] if "best_s" in t}
+
+    # dispatch-time resolution picks the persisted winner for this bucket...
+    assert spec.resolve_blocks(dims) == blocks
+    # ...and ignores it for a different bucket (falls back to defaults)
+    other_dims = {"T": 4 * dims["T"], "B": dims["B"], "D": dims["D"]}
+    default_blocks = spec.resolve_blocks(other_dims, use_cache=False)
+    assert spec.resolve_blocks(other_dims) == default_blocks
+
+
+def test_tuned_blocks_still_produce_correct_results(tmp_path, monkeypatch):
+    """End-to-end: plant a deliberately odd tuned config and check the
+    kernel output is still exact — tuning may only change performance."""
+    from repro.kernels.linrec.ops import linrec
+    from repro.kernels.linrec.ref import linrec_naive
+
+    path = str(tmp_path / "tuned.json")
+    monkeypatch.setenv("REPRO_TUNING_CACHE", path)
+    spec = registry.get("linrec")
+    k = jax.random.PRNGKey(1)
+    a = jax.random.uniform(k, (48, 2, 130), jnp.float32, 0.5, 0.99)
+    x = jax.random.normal(jax.random.fold_in(k, 1), (48, 2, 130))
+    h0 = jnp.zeros((2, 130))
+    dims = spec.dims_of(a, x, h0)
+
+    cache = tuning.TuningCache(path)
+    cache.put("linrec", jax.default_backend(), tuning.shape_bucket(dims),
+              {"ct": 16, "bb": 8, "bd": 128})
+    cache.save()
+    assert spec.resolve_blocks(dims)["ct"] == 16    # the planted config wins
+
+    y_ref, h_ref = linrec_naive(a, x, h0)
+    y_k, h_k = linrec(a, x, h0, True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_ref),
+                               rtol=1e-5, atol=1e-5)

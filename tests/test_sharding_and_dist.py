@@ -107,6 +107,8 @@ mode, inputs, shardings = specs_mod.cell_inputs(cfg, "{shape}", mesh)
 step = specs_mod.step_fn_for(cfg, mode)
 compiled = jax.jit(step, in_shardings=shardings).lower(*inputs).compile()
 cost = compiled.cost_analysis()
+if isinstance(cost, (list, tuple)):   # jax<0.5 returns a per-device list
+    cost = cost[0] if cost else {{}}
 print(json.dumps({{"flops": cost.get("flops", 0.0), "ok": True}}))
 """
 
