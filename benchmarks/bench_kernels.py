@@ -39,6 +39,13 @@ TUNE_SHAPES = {
         jax.random.uniform(jax.random.fold_in(key, 1), (512,), jnp.float32,
                            0.7, 0.98),
         jnp.zeros((8, 512))),
+    "lifrec": lambda key: (
+        0.7 * jax.random.normal(key, (512, 8, 256)),
+        (0.3 / 16.0) * jax.random.normal(jax.random.fold_in(key, 1),
+                                         (256, 256)),
+        jax.random.uniform(jax.random.fold_in(key, 2), (256,), jnp.float32,
+                           0.7, 0.98),
+        jnp.zeros((8, 256)), jnp.zeros((8, 256))),
     "spikemm": lambda key: (
         (jax.random.uniform(key, (1024, 2048)) < 0.08).astype(jnp.float32),
         jax.random.normal(jax.random.fold_in(key, 1), (2048, 512))),

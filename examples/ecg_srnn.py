@@ -12,7 +12,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core import events
+from repro.core import plan
 from repro.core.snn_layers import make_srnn_ecg
 from repro.data.spikes import gen_ecg_qtdb
 
@@ -23,11 +23,12 @@ def train(heterogeneous: bool, steps: int, T: int = 200):
     y = jnp.asarray(ys.T)
     nodes, params = make_srnn_ecg(jax.random.PRNGKey(0),
                                   heterogeneous=heterogeneous, n_hidden=48)
+    print(f"  plan: {plan.compile_program(nodes).describe()}")
 
     @jax.jit
     def loss_grad(params):
         def loss(params):
-            _, outs, _ = events.run(nodes, params, x)
+            _, outs, _ = plan.run(nodes, params, x)
             logp = jax.nn.log_softmax(outs, -1)
             return -jnp.mean(jnp.take_along_axis(logp, y[..., None], -1))
         return jax.value_and_grad(loss)(params)
@@ -43,7 +44,7 @@ def train(heterogeneous: bool, steps: int, T: int = 200):
             print(f"  step {i:4d} loss {float(l):.4f}")
 
     xt, yt = gen_ecg_qtdb(8, seed=7, T=T)
-    _, outs, _ = events.run(nodes, params, jnp.asarray(xt.transpose(1, 0, 2)))
+    _, outs, _ = plan.run(nodes, params, jnp.asarray(xt.transpose(1, 0, 2)))
     acc = float(jnp.mean(jnp.argmax(outs, -1) == jnp.asarray(yt.T)))
     return acc
 

@@ -15,7 +15,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core import events
+from repro.core import plan
 from repro.core.mapping import CORE_FANIN, Op, partition
 from repro.core.snn_layers import make_dhsnn_shd
 from repro.data.spikes import gen_shd_spikes
@@ -27,11 +27,12 @@ def train(dendritic: bool, steps: int):
     y = jnp.asarray(ys)
     nodes, params = make_dhsnn_shd(jax.random.PRNGKey(1), n_hidden=64,
                                    dendritic=dendritic)
+    print(f"  plan: {plan.compile_program(nodes).describe()}")
 
     @jax.jit
     def loss_grad(params):
         def loss(params):
-            _, outs, _ = events.run(nodes, params, x)
+            _, outs, _ = plan.run(nodes, params, x)
             logits = jnp.mean(outs, 0)
             return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(y)), y])
         return jax.value_and_grad(loss)(params)
@@ -47,9 +48,9 @@ def train(dendritic: bool, steps: int):
             print(f"  step {i:4d} loss {float(l):.4f}")
 
     xt, yt = gen_shd_spikes(48, T=60, seed=11)
-    _, outs, recs = events.run(nodes, params,
-                               jnp.asarray(xt.transpose(1, 0, 2)),
-                               record=("hidden",))
+    _, outs, recs = plan.run(nodes, params,
+                             jnp.asarray(xt.transpose(1, 0, 2)),
+                             record=("hidden",))
     acc = float(jnp.mean(jnp.argmax(jnp.mean(outs, 0), -1) == jnp.asarray(yt)))
     rate = float(jnp.mean(recs["hidden"]))
     return acc, rate

@@ -70,8 +70,16 @@ def init_state(nodes: List[LayerNode], batch: int, dtype=jnp.float32):
 
 
 def step(nodes: List[LayerNode], params: Dict[str, Any], state: Dict[str, Any],
-         x_t: Array) -> Tuple[Dict[str, Any], Array]:
-    """One INTEG+FIRE timestep through all nodes (in order)."""
+         x_t: Array, ext: Optional[Dict[str, Array]] = None
+         ) -> Tuple[Dict[str, Any], Array]:
+    """One INTEG+FIRE timestep through all nodes (in order).
+
+    `ext` maps raw input specifiers (e.g. "conv1", "conv1@2") to externally
+    supplied per-timestep feeds — the plan compiler (`core/plan.py`) uses it
+    to run a fallback *segment* of a Program whose remaining nodes were
+    fused out of the time loop (their full-time outputs, delay-shifted as
+    needed, arrive here one slice per step).
+    """
     new_state = dict(state)
     emitted: Dict[str, Array] = {"input": x_t}
     for n in nodes:
@@ -80,6 +88,8 @@ def step(nodes: List[LayerNode], params: Dict[str, Any], state: Dict[str, Any],
             name, d = _parse_src(src)
             if name == "self":
                 feeds[src] = state[n.name]["out"]          # recurrent: t-1
+            elif ext is not None and src in ext:
+                feeds[src] = ext[src]                      # plan-fused source
             elif d:
                 feeds[src] = state[name]["ring"][d - 1]    # delayed-fire
             elif name in emitted:

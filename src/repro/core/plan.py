@@ -1,0 +1,312 @@
+"""Program compiler: lower an event-driven Program to a fused execution plan.
+
+The generic stepper (`events.run`) interprets a Program one timestep at a
+time: every node pays T kernel launches and round-trips its membrane state
+through HBM every step, and the INTEG matmuls run at (B, fan_in) — far too
+skinny to feed the MXU. But most Program structure is static: which node
+feeds which, with what delay, through which neuron dynamics. This module
+analyzes that structure once and emits a plan of *segments*, each executed
+over the whole time axis at once:
+
+  fused_ff    A node whose inputs are all same-timestep feeds from earlier
+              segments (or the external input). INTEG is hoisted out of the
+              time loop entirely — one registry-dispatched `spikemm` over
+              the (T*B, fan_in) spike matrix (block-occupancy flags = the
+              FINDIDX bitmap at MXU granularity) — and FIRE becomes one
+              time-fused kernel over the (T, B, N) current block:
+              `lif` for LIF/PLIF, `linrec` for LI readouts.
+  fused_rec   Same hoisted INTEG for the feed-forward part, plus the
+              `lifrec` kernel for the self-connection: recurrent weights
+              stay resident in VMEM and time runs serially inside the
+              kernel (LIF/PLIF + "self").
+  fallback    Everything the planner can't fuse yet (ALIF moving threshold,
+              DHLIF branch integrate, non-tagged integrate functions) runs
+              through the stepper — per segment, with the fused neighbours'
+              full-time outputs (delay-shifted as needed) fed in externally.
+
+Delayed ("src@d") reads of a *fused* source are exact: the ring buffer the
+stepper would maintain is just a time-shift of the source's full output
+tensor, seeded from the initial ring state.
+
+Capability checks keep the compiler conservative: a Program where any node
+reads a *later* node (previous-timestep semantics) compiles to a single
+whole-program fallback segment, i.e. exactly `events.run`. Every Program
+runs; fusable ones run fast.
+
+Env knob: REPRO_SNN_ENGINE = plan | stepper | auto (auto = plan). Set
+`stepper` to force the interpreted engine, e.g. when bisecting a numerics
+difference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events
+from repro.core.neuron import LI, LIF, PLIF
+from repro.kernels.lif.ops import lif_scan
+from repro.kernels.lifrec.ops import lifrec_scan
+from repro.kernels.linrec.ops import linrec
+from repro.kernels.spikemm.ops import spikemm
+
+Array = jax.Array
+
+FUSED_FF = "fused_ff"
+FUSED_REC = "fused_rec"
+FALLBACK = "fallback"
+
+
+def engine_mode() -> str:
+    mode = os.environ.get("REPRO_SNN_ENGINE", "auto")
+    if mode not in ("auto", "plan", "stepper"):
+        raise ValueError(f"REPRO_SNN_ENGINE={mode!r}: "
+                         "expected 'plan', 'stepper', or 'auto'")
+    return mode
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One unit of the lowered schedule, executed over the full time axis."""
+
+    kind: str                  # fused_ff | fused_rec | fallback
+    names: Tuple[str, ...]     # node names (fused segments hold exactly one)
+    reason: str = ""           # why the planner fell back (diagnostics)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    segments: Tuple[Segment, ...]
+
+    @property
+    def fully_fallback(self) -> bool:
+        return all(s.kind == FALLBACK for s in self.segments)
+
+    def describe(self) -> str:
+        parts = []
+        for s in self.segments:
+            tag = f"{s.kind}[{','.join(s.names)}]"
+            if s.reason:
+                tag += f"({s.reason})"
+            parts.append(tag)
+        return " -> ".join(parts)
+
+
+def _hoistable(node: events.LayerNode) -> bool:
+    """INTEG can be hoisted iff the integrate fn declares the `w_<src>`
+    matmul convention (see `snn_layers.ff_integrate`)."""
+    return getattr(node.integrate, "hoist", None) == "ff"
+
+
+def _classify(node: events.LayerNode, order: Dict[str, int]
+              ) -> Tuple[str, str]:
+    """-> (segment kind, fallback reason)."""
+    if not _hoistable(node):
+        return FALLBACK, "integrate not hoistable"
+    n_self = 0
+    for src in node.inputs:
+        name, d = events._parse_src(src)
+        if name == "self":
+            if d:
+                return FALLBACK, "delayed self"
+            n_self += 1
+        elif name != "input" and order[name] >= order[node.name]:
+            # previous-timestep read of a later node: handled by caller
+            # (whole-program fallback); unreachable here, kept for safety
+            return FALLBACK, "back reference"
+    if n_self > 1:
+        return FALLBACK, "multiple self feeds"
+    neuron = node.neuron
+    if n_self:
+        if type(neuron) in (LIF, PLIF):
+            return FUSED_REC, ""
+        return FALLBACK, f"recurrent {type(neuron).__name__}"
+    if type(neuron) in (LIF, PLIF):
+        return FUSED_FF, ""
+    if type(neuron) is LI:
+        return FUSED_FF, ""
+    return FALLBACK, type(neuron).__name__
+
+
+def compile_program(nodes: List[events.LayerNode]) -> Plan:
+    """Analyze the node DAG and emit the segment schedule."""
+    order = {n.name: i for i, n in enumerate(nodes)}
+    # Any previous-timestep read of a later node couples the whole Program
+    # per-timestep: compile to one stepper segment (exactly events.run).
+    for n in nodes:
+        for src in n.inputs:
+            name, _ = events._parse_src(src)
+            if name not in ("input", "self") and order[name] >= order[n.name]:
+                return Plan((Segment(FALLBACK, tuple(x.name for x in nodes),
+                                     f"{n.name} reads later node {name}"),))
+
+    segments: List[Segment] = []
+    pending_fallback: List[str] = []
+    pending_reason = ""
+
+    def flush():
+        nonlocal pending_fallback, pending_reason
+        if pending_fallback:
+            segments.append(Segment(FALLBACK, tuple(pending_fallback),
+                                    pending_reason))
+            pending_fallback, pending_reason = [], ""
+
+    for n in nodes:
+        kind, reason = _classify(n, order)
+        if kind == FALLBACK:
+            pending_fallback.append(n.name)
+            pending_reason = (pending_reason + "; " if pending_reason
+                              else "") + f"{n.name}: {reason}"
+        else:
+            flush()
+            segments.append(Segment(kind, (n.name,)))
+    flush()
+    return Plan(tuple(segments))
+
+
+# ---------------------------------------------------------------------------
+# plan execution
+# ---------------------------------------------------------------------------
+
+
+def _feed_full(outs: Dict[str, Array], state: Dict[str, Any], name: str,
+               d: int, T: int) -> Array:
+    """Full-time feed of source `name` delayed by `d` steps.
+
+    feed_t = out_{t-d}; times < 0 come from the source's initial ring
+    (zeros when the Program starts cold), exactly the stepper's delayed-fire
+    semantics.
+    """
+    s_full = outs[name]
+    if d == 0:
+        return s_full
+    ring = state.get(name, {}).get("ring")
+    if ring is not None:
+        prefix = ring[d - 1::-1]                     # s_{-d} ... s_{-1}
+    else:
+        prefix = jnp.zeros((d,) + s_full.shape[1:], s_full.dtype)
+    return jnp.concatenate([prefix, s_full], axis=0)[:T]
+
+
+def _advance_ring(ring: Array, out_full: Array) -> Array:
+    """Ring state after the whole run: ring[k] = out_{T-1-k}, seeded from
+    the initial ring for T < k."""
+    stacked = jnp.concatenate([ring[::-1], out_full], axis=0)
+    return stacked[-ring.shape[0]:][::-1]
+
+
+def _hoisted_current(node: events.LayerNode, params: Dict[str, Any],
+                     outs: Dict[str, Array], state: Dict[str, Any],
+                     T: int, B: int) -> Array:
+    """All-T INTEG: one event-gated spikemm per inbound feed."""
+    cur = None
+    for src in node.inputs:
+        name, d = events._parse_src(src)
+        if name == "self":
+            continue
+        s = _feed_full(outs, state, name, d, T)
+        w = params[node.name][f"w_{name}"]
+        c = spikemm(s.reshape(T * B, -1), w).reshape(T, B, -1)
+        cur = c if cur is None else cur + c
+    if cur is None:
+        cur = jnp.zeros((T, B, node.out_dim), outs["input"].dtype)
+    return cur
+
+
+def _tau_vector(node: events.LayerNode, params: Dict[str, Any]) -> Array:
+    neuron = node.neuron
+    if type(neuron) is PLIF:
+        return jax.nn.sigmoid(
+            params[node.name]["neuron"]["w_tau"].astype(jnp.float32))
+    return jnp.full((node.out_dim,), neuron.tau, jnp.float32)
+
+
+def _run_fused(node: events.LayerNode, kind: str, params: Dict[str, Any],
+               outs: Dict[str, Array], state: Dict[str, Any],
+               new_state: Dict[str, Any], T: int, B: int) -> None:
+    cur = _hoisted_current(node, params, outs, state, T, B)
+    neuron = node.neuron
+    v0 = state[node.name]["v"]
+    if type(neuron) is LI:
+        a = jnp.broadcast_to(jnp.asarray(neuron.tau, cur.dtype), cur.shape)
+        out, vT = linrec(a, cur, v0)
+    elif kind == FUSED_REC:
+        out, vT = lifrec_scan(cur, params[node.name]["w_self"],
+                              _tau_vector(node, params), v0,
+                              state[node.name]["out"], neuron.v_th,
+                              neuron.surrogate, neuron.alpha)
+    else:
+        out, vT = lif_scan(cur, _tau_vector(node, params), v0, neuron.v_th,
+                           neuron.surrogate, neuron.alpha)
+    outs[node.name] = out
+    ns = {"v": vT, "out": out[-1]}
+    if "ring" in state[node.name]:
+        ns["ring"] = _advance_ring(state[node.name]["ring"], out)
+    new_state[node.name] = ns
+
+
+def _run_fallback(seg: Segment, nodes_by_name: Dict[str, events.LayerNode],
+                  params: Dict[str, Any], x: Array, outs: Dict[str, Array],
+                  state: Dict[str, Any], new_state: Dict[str, Any],
+                  T: int) -> None:
+    seg_nodes = [nodes_by_name[name] for name in seg.names]
+    seg_names = set(seg.names)
+    sub_state = {name: state[name] for name in seg.names}
+    ext: Dict[str, Array] = {}
+    for n in seg_nodes:
+        for src in n.inputs:
+            name, d = events._parse_src(src)
+            if name == "self" or name in seg_names or src in ext:
+                continue
+            if name == "input" and d == 0:
+                continue                 # events.step already emits x_t
+            ext[src] = _feed_full(outs, state, name, d, T)
+
+    def body(st, ts):
+        x_t, ext_t = ts
+        st, _ = events.step(seg_nodes, params, st, x_t, ext=ext_t)
+        return st, {name: st[name]["out"] for name in seg.names}
+
+    final_sub, rec = jax.lax.scan(body, sub_state, (x, ext))
+    outs.update(rec)
+    new_state.update(final_sub)
+
+
+def run(nodes: List[events.LayerNode], params: Dict[str, Any], x: Array,
+        state: Optional[Dict[str, Any]] = None, record: Tuple[str, ...] = (),
+        plan: Optional[Plan] = None):
+    """Drop-in replacement for `events.run` through the compiled plan.
+
+    x: (T, batch, n_in). Returns (final_state, outputs (T, batch, n_out),
+    recorded dict) — numerically equivalent to the stepper.
+    """
+    if engine_mode() == "stepper":
+        return events.run(nodes, params, x, state, record)
+    if plan is None:
+        plan = compile_program(nodes)
+    if plan.fully_fallback:
+        return events.run(nodes, params, x, state, record)
+
+    T, B = x.shape[0], x.shape[1]
+    if state is None:
+        state = events.init_state(nodes, B, x.dtype)
+    nodes_by_name = {n.name: n for n in nodes}
+    outs: Dict[str, Array] = {"input": x}
+    new_state = dict(state)
+    for seg in plan.segments:
+        if seg.kind == FALLBACK:
+            _run_fallback(seg, nodes_by_name, params, x, outs, state,
+                          new_state, T)
+        else:
+            _run_fused(nodes_by_name[seg.names[0]], seg.kind, params, outs,
+                       state, new_state, T, B)
+    recs = {r: outs[r] for r in record}
+    return new_state, outs[nodes[-1].name], recs
+
+
+__all__ = ["Plan", "Segment", "compile_program", "engine_mode", "run",
+           "FUSED_FF", "FUSED_REC", "FALLBACK"]

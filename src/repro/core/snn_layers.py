@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.core import events
 from repro.core.neuron import ALIF, DHLIF, LI, LIF, PLIF, locacc
 from repro.core.plasticity import accumulated_spike_fc, fuse_bn1d_fc
+from repro.kernels.lif.ops import lif_scan
 
 Array = jax.Array
 
@@ -49,6 +50,12 @@ def ff_integrate(params, feeds):
         key = name.split("@")[0]
         cur = cur + locacc(s, params[f"w_{key}"])
     return cur
+
+
+# The `hoist` tag tells the plan compiler (core/plan.py) this INTEG is the
+# per-feed `s @ w_<src>` convention, so it can be lifted out of the time
+# loop as one all-T spikemm per feed. Custom integrates opt in the same way.
+ff_integrate.hoist = "ff"
 
 
 def branch_integrate(params, feeds):
@@ -175,14 +182,12 @@ def bci_forward(params, x, cfg: BCIConfig, lif=LIF(tau=0.8)):
     # Hadamard fusion + addition
     fused = lin * att + tconv                                   # (B, P, T, D)
     feat = fused.transpose(2, 0, 1, 3).reshape(T, B, cfg.n_paths * cfg.d_path)
-    # LIF over time
-    state = lif.init_state(feat.shape[1:], feat.dtype)
-
-    def body(st, f_t):
-        st, s = lif.fire(st, f_t)
-        return st, s
-
-    _, spikes = jax.lax.scan(body, state, feat)                 # (T, B, P*D)
+    # LIF over time — the fused kernel runs the whole (T, B, P*D) current
+    # block in one launch (plan-path FIRE; currents are already all-T here)
+    n_feat = cfg.n_paths * cfg.d_path
+    v0 = jnp.zeros((B, n_feat), feat.dtype)
+    spikes, _ = lif_scan(feat, jnp.full((n_feat,), lif.tau, jnp.float32), v0,
+                         lif.v_th, lif.surrogate, lif.alpha)    # (T, B, P*D)
     logits = accumulated_spike_fc(spikes, params["fc_w"], params["fc_b"])
     return logits, spikes
 

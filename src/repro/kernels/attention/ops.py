@@ -97,10 +97,15 @@ registry.register(registry.KernelSpec(
                                                     force_pallas=force),
     block_axes=(registry.BlockAxis("bq", "T", preferred=512, align=128),
                 registry.BlockAxis("bk", "S", preferred=512, align=128)),
-    dims_of=lambda q, k, v: {"T": q.shape[1], "S": k.shape[1]},
+    dims_of=lambda q, k, v: {"T": q.shape[1], "S": k.shape[1],
+                             "d": q.shape[2]},
     candidates=({"bq": 128, "bk": 128}, {"bq": 256, "bk": 256},
                 {"bq": 256, "bk": 512}, {"bq": 512, "bk": 512}),
     make_inputs=_make_inputs,
     diff_argnums=(0, 1, 2),
     tol=2e-3,
+    # q/o blocks + k/v blocks + the (bq, bk) score tile & softmax stats
+    vmem_bytes=lambda dims, b: 4 * (2 * b["bq"] * dims["d"]
+                                    + 2 * b["bk"] * dims["d"]
+                                    + b["bq"] * b["bk"] + 3 * b["bq"]),
 ))

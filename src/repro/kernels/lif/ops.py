@@ -37,8 +37,10 @@ from repro.kernels.lif.ref import lif_scan_ref
 def _pallas_impl(current, tau, v0, *, blocks, interpret, v_th=1.0):
     T, B, N = current.shape
     ct, bb, bn = blocks["ct"], blocks["bb"], blocks["bn"]
-    c_p, _ = pad_axis(current, 0, ct)
-    c_p, _ = pad_axis(c_p, 1, bb)
+    # 'ct' is an exact-policy axis (see lifrec/ops.py): zero-padded time
+    # steps would keep decaying v past T, so non-divisors must fail loudly.
+    assert T % ct == 0, (T, ct)
+    c_p, _ = pad_axis(current, 1, bb)
     c_p, _ = pad_axis(c_p, 2, bn)
     tau_p, _ = pad_axis(tau, 0, bn, value=1.0)
     v0_p, _ = pad_axis(v0, 0, bb)
@@ -136,4 +138,7 @@ registry.register(registry.KernelSpec(
     make_inputs=_make_inputs,
     diff_argnums=(0, 1, 2),
     tol=1e-4,
+    # current + spikes blocks dominate; v scratch/v0/vT + tau ride along
+    vmem_bytes=lambda dims, b: 4 * (2 * b["ct"] * b["bb"] * b["bn"]
+                                    + 3 * b["bb"] * b["bn"] + b["bn"]),
 ))

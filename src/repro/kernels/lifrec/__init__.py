@@ -1,0 +1,4 @@
+from repro.kernels.lifrec.ops import lifrec_scan
+from repro.kernels.lifrec.ref import lifrec_scan_ref
+
+__all__ = ["lifrec_scan", "lifrec_scan_ref"]

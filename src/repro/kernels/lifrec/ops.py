@@ -1,0 +1,165 @@
+"""Public fused recurrent-LIF entry point with surrogate-gradient VJP.
+
+Forward dispatches through the kernel registry (Pallas when forced or on
+TPU under `auto`, scan reference otherwise). Backward is STBP through both
+couplings of the recurrence:
+
+    u_t = tau * v_{t-1} + c_t + s_{t-1} @ W      (pre-reset potential)
+    s_t = H(u_t - v_th)
+    v_t = u_t (1 - s_t)
+
+With Gu_t = dL/du_t, Gs_t the external spike cotangent, and g() the
+surrogate window, the spike cotangent gains a recurrent term relative to
+the pure-FF LIF adjoint (`lif/ops.py`) — spikes at t feed u_{t+1} through W:
+
+    Gs~_t = Gs_t + Gu_{t+1} @ W^T
+    Gu_t  = Gv_t (1 - s_t) + (Gs~_t - Gv_t u_t) g(u_t - v_th)
+    Gv_{t-1} = tau * Gu_t
+    dL/dc_t = Gu_t          dL/dW  = sum_t s_{t-1}^T Gu_t
+    dL/dtau = sum Gu_t v_{t-1}     dL/dv0 = tau Gu_0
+    dL/ds0  = Gu_0 @ W^T
+
+u is recomputed forward from (c, s) instead of being stored — one extra
+scan, the same storage/recompute trade `lif/ops.py` makes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.surrogate import _SURROGATES
+from repro.kernels import registry
+from repro.kernels.common import pad_axis
+from repro.kernels.lifrec.kernel import lifrec_pallas
+from repro.kernels.lifrec.ref import lifrec_scan_ref
+
+
+def _pallas_impl(current, w_rec, tau, v0, s0, *, blocks, interpret,
+                 v_th=1.0):
+    T, B, N = current.shape
+    ct, bb = blocks["ct"], blocks["bb"]
+    # 'ct' is an exact-policy axis: resolve_blocks only hands out divisors
+    # of T. Zero-padding time instead would run extra decay steps past T
+    # and silently corrupt v_final, so a non-divisor must fail loudly.
+    assert T % ct == 0, (T, ct)
+    c_p, _ = pad_axis(current, 1, bb)
+    c_p, _ = pad_axis(c_p, 2, 128)
+    w_p, _ = pad_axis(w_rec.astype(current.dtype), 0, 128)
+    w_p, _ = pad_axis(w_p, 1, 128)
+    tau_p, _ = pad_axis(tau, 0, 128, value=1.0)
+    v0_p, _ = pad_axis(v0, 0, bb)
+    v0_p, _ = pad_axis(v0_p, 1, 128)
+    s0_p, _ = pad_axis(s0, 0, bb)
+    s0_p, _ = pad_axis(s0_p, 1, 128)
+    s, vT = lifrec_pallas(c_p, w_p, tau_p, v0_p, s0_p, v_th=v_th,
+                          ct=ct, bb=bb, interpret=interpret)
+    return s[:T, :B, :N], vT[:B, :N]
+
+
+def _fwd_impl(current, w_rec, tau, v0, s0, v_th, force_pallas):
+    return registry.dispatch("lifrec", (current, w_rec, tau, v0, s0),
+                             force_pallas=force_pallas, v_th=v_th)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def lifrec_scan(current: jax.Array, w_rec: jax.Array, tau: jax.Array,
+                v0: jax.Array, s0: jax.Array, v_th: float = 1.0,
+                surrogate: str = "rectangle", alpha: float = 1.0,
+                force_pallas: bool = False):
+    """Fused recurrent LIF over time. current: (T,B,N); w_rec: (N,N);
+    tau: (N,); v0/s0: (B,N).
+
+    Returns (spikes (T,B,N), v_final (B,N)). Differentiable via STBP/BPTT.
+    """
+    return _fwd_impl(current, w_rec, tau, v0, s0, v_th, force_pallas)
+
+
+def _lifrec_fwd(current, w_rec, tau, v0, s0, v_th, surrogate, alpha,
+                force_pallas):
+    s, vT = _fwd_impl(current, w_rec, tau, v0, s0, v_th, force_pallas)
+    return (s, vT), (current, w_rec, tau, v0, s0, s)
+
+
+def _lifrec_bwd(v_th, surrogate, alpha, force_pallas, res, cts):
+    current, w_rec, tau, v0, s0, s = res
+    gs, gvT = cts
+    g_fn = _SURROGATES[surrogate]
+    tau32 = tau.astype(jnp.float32)
+    w32 = w_rec.astype(jnp.float32)
+    c32 = current.astype(jnp.float32)
+    s32 = s.astype(jnp.float32)
+
+    def fwd_body(carry, ts):
+        v, s_prev = carry
+        c_t, s_t = ts
+        u = tau32 * v + c_t + s_prev @ w32
+        v = u * (1.0 - s_t)
+        return (v, s_t), (u, v, s_prev)
+
+    (_, _), (u, v_seq, s_prev) = jax.lax.scan(
+        fwd_body, (v0.astype(jnp.float32), s0.astype(jnp.float32)),
+        (c32, s32))
+    v_prev = jnp.concatenate([v0[None].astype(jnp.float32), v_seq[:-1]], 0)
+    surr = g_fn(u - v_th, jnp.asarray(alpha, jnp.float32))
+
+    def bwd_body(carry, ts):
+        gv, gu_next = carry
+        gs_t, u_t, s_t, surr_t = ts
+        gs_tot = gs_t + gu_next @ w32.T
+        gu = gv * (1.0 - s_t) + (gs_tot - gv * u_t) * surr_t
+        return (tau32 * gu, gu), gu
+
+    zero_gu = jnp.zeros(gs.shape[1:], jnp.float32)
+    (_, _), gu = jax.lax.scan(
+        bwd_body, (gvT.astype(jnp.float32), zero_gu),
+        (gs.astype(jnp.float32), u, s32, surr), reverse=True)
+    g_current = gu.astype(current.dtype)
+    g_w = jnp.einsum("tbi,tbj->ij", s_prev, gu).astype(w_rec.dtype)
+    g_tau = jnp.sum(gu * v_prev, axis=(0, 1)).astype(tau.dtype)
+    g_v0 = (tau32 * gu[0]).astype(v0.dtype)
+    g_s0 = (gu[0] @ w32.T).astype(s0.dtype)
+    return g_current, g_w, g_tau, g_v0, g_s0
+
+
+lifrec_scan.defvjp(_lifrec_fwd, _lifrec_bwd)
+
+
+def _make_inputs(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    T, B, N = 20, 3, 70                       # non-multiples exercise padding
+    current = 0.8 * jax.random.normal(k1, (T, B, N), jnp.float32)
+    w_rec = (0.4 / jnp.sqrt(N)) * jax.random.normal(k2, (N, N), jnp.float32)
+    tau = jax.random.uniform(k3, (N,), jnp.float32, 0.7, 0.98)
+    v0 = jnp.zeros((B, N), jnp.float32)
+    s0 = jnp.zeros((B, N), jnp.float32)
+    return current, w_rec, tau, v0, s0
+
+
+def _vmem_bytes(dims, blocks):
+    n = -(-dims["N"] // 128) * 128
+    ct, bb = blocks["ct"], blocks["bb"]
+    # current + spikes blocks, resident W, and the v/s/tau/v0/s0/vT tiles
+    return 4 * (2 * ct * bb * n + n * n + 6 * bb * n + n)
+
+
+registry.register(registry.KernelSpec(
+    name="lifrec",
+    ref=lifrec_scan_ref,
+    pallas=_pallas_impl,
+    apply=lambda args, force=False: lifrec_scan(*args, 1.0, "rectangle", 1.0,
+                                                force),
+    block_axes=(registry.BlockAxis("ct", "T", preferred=128, align=8,
+                                   exact=True),
+                registry.BlockAxis("bb", "B", preferred=8, align=8)),
+    dims_of=lambda current, w_rec, tau, v0, s0: {"T": current.shape[0],
+                                                 "B": current.shape[1],
+                                                 "N": current.shape[2]},
+    candidates=({"ct": 64}, {"ct": 128}, {"ct": 256}, {"ct": 128, "bb": 16}),
+    make_inputs=_make_inputs,
+    diff_argnums=(0, 1, 2, 3, 4),
+    tol=1e-4,
+    vmem_bytes=_vmem_bytes,
+))

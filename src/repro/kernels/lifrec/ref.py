@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused recurrent-LIF time scan.
+
+Recurrent LIF (the SRNN hidden layer, paper §V-B3) couples the FIRE stage
+back into the next INTEG stage through the self-connection:
+
+    u_t = tau * v_{t-1} + c_t + s_{t-1} @ W_rec
+    s_t = H(u_t - v_th)
+    v_t = u_t * (1 - s_t)
+
+`c` is the feed-forward current, already hoisted out of the time loop by
+the plan compiler (one all-T spikemm); only the self-term is serial.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lifrec_scan_ref(current: jax.Array, w_rec: jax.Array, tau: jax.Array,
+                    v0: jax.Array, s0: jax.Array, v_th: float = 1.0):
+    """current: (T, B, N); w_rec: (N, N); tau: (N,); v0, s0: (B, N).
+
+    Returns (spikes (T, B, N), v_final (B, N)). fp32 state.
+    """
+    dt = current.dtype
+    tau32 = tau.astype(jnp.float32)
+    w32 = w_rec.astype(jnp.float32)
+
+    def body(carry, c_t):
+        v, s = carry
+        v = tau32 * v + c_t.astype(jnp.float32) + s @ w32
+        spk = (v >= v_th).astype(jnp.float32)
+        v = v * (1.0 - spk)
+        return (v, spk), spk.astype(dt)
+
+    (vT, _), spikes = jax.lax.scan(
+        body, (v0.astype(jnp.float32), s0.astype(jnp.float32)), current)
+    return spikes, vT.astype(dt)

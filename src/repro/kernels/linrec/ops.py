@@ -105,4 +105,7 @@ registry.register(registry.KernelSpec(
     make_inputs=_make_inputs,
     diff_argnums=(0, 1, 2),
     tol=1e-4,
+    # a + x in, y out, plus the h carry/h0/hT tiles
+    vmem_bytes=lambda dims, b: 4 * (3 * b["ct"] * b["bb"] * b["bd"]
+                                    + 3 * b["bb"] * b["bd"]),
 ))

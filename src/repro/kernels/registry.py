@@ -33,7 +33,8 @@ the pattern. The spec carries everything the generic machinery needs:
     ))
 
 Environment knobs:
-  REPRO_KERNEL_IMPL     = ref | pallas | auto   (auto: ref unless forced)
+  REPRO_KERNEL_IMPL     = ref | pallas | auto   (auto: pallas on TPU,
+                                                 ref elsewhere)
   REPRO_PALLAS_INTERPRET= 1 | 0                 (force interpret on/off)
   REPRO_TUNING_CACHE    = path to the JSON tuning cache
 """
@@ -64,8 +65,11 @@ def use_pallas(force_pallas: bool = False) -> bool:
     """Resolve the ref-vs-pallas choice for one call.
 
     `force_pallas=True` (the per-call/config escape hatch) always wins;
-    otherwise `REPRO_KERNEL_IMPL` picks globally, and `auto` (the default)
-    keeps the conservative seed semantics: the XLA reference path.
+    otherwise `REPRO_KERNEL_IMPL` picks globally. `auto` (the default)
+    prefers the Mosaic kernels on a real TPU — every family is gated by the
+    ref<->Pallas parity harness, so the fast path is the default where it
+    actually is fast — and keeps the XLA reference elsewhere (interpret-mode
+    Pallas on CPU is a debugging tool, not an execution engine).
     """
     if force_pallas:
         return True
@@ -75,7 +79,9 @@ def use_pallas(force_pallas: bool = False) -> bool:
                          "expected 'ref', 'pallas', or 'auto'")
     if mode == "pallas":
         return True
-    return False  # ref, or auto: reference unless explicitly forced
+    if mode == "ref":
+        return False
+    return on_tpu()
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +142,10 @@ class KernelSpec:
     make_inputs: Optional[Callable[..., tuple]] = None
     diff_argnums: Tuple[int, ...] = ()
     tol: float = 1e-4
+    # (dims, blocks) -> estimated per-grid-step VMEM working set in bytes;
+    # the autotuner prunes candidates that exceed the budget before timing.
+    vmem_bytes: Optional[Callable[[Mapping[str, int], Mapping[str, int]],
+                                  int]] = None
 
     def resolve_blocks(self, dims: Mapping[str, int],
                        overrides: Optional[Mapping[str, int]] = None,
@@ -166,6 +176,7 @@ _REGISTRY: Dict[str, KernelSpec] = {}
 _KERNEL_MODULES = (
     "repro.kernels.linrec.ops",
     "repro.kernels.lif.ops",
+    "repro.kernels.lifrec.ops",
     "repro.kernels.spikemm.ops",
     "repro.kernels.attention.ops",
     "repro.kernels.stdp.ops",

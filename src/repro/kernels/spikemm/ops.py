@@ -111,4 +111,7 @@ registry.register(registry.KernelSpec(
     make_inputs=_make_inputs,
     diff_argnums=(0, 1),
     tol=1e-4,
+    # spike + weight blocks in, out block + fp32 accumulator
+    vmem_bytes=lambda dims, b: 4 * (b["bm"] * b["bk"] + b["bk"] * b["bn"]
+                                    + 2 * b["bm"] * b["bn"]),
 ))

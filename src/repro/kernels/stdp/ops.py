@@ -62,10 +62,14 @@ registry.register(registry.KernelSpec(
     block_axes=(registry.BlockAxis("bm", "M", preferred=256, align=8),
                 registry.BlockAxis("bn", "N", preferred=256, align=128)),
     dims_of=lambda x_pre, s_post, s_pre, x_post, w: {"M": w.shape[0],
-                                                     "N": w.shape[1]},
+                                                     "N": w.shape[1],
+                                                     "B": x_pre.shape[0]},
     candidates=({"bm": 128, "bn": 128}, {"bm": 128, "bn": 256},
                 {"bm": 256, "bn": 128}, {"bm": 512, "bn": 256}),
     make_inputs=_make_inputs,
     diff_argnums=(),                          # weight write: forward-only
     tol=1e-4,
+    # w block in/out + the four (B, block) trace/spike slabs
+    vmem_bytes=lambda dims, b: 4 * (2 * b["bm"] * b["bn"]
+                                    + 2 * dims["B"] * (b["bm"] + b["bn"])),
 ))

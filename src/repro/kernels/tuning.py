@@ -15,7 +15,17 @@ where the shape bucket rounds every logical dimension up to a power of two
 a cache miss silently falls back to the spec's hand-tuned defaults, so
 tuning is always an optimization, never a correctness dependency.
 
+Before anything is timed, candidates whose estimated VMEM working set
+(`KernelSpec.vmem_bytes`) exceeds the budget (`REPRO_VMEM_LIMIT_MB`,
+default 14 MiB — one TPU core's ~16 MiB minus headroom) are pruned: an
+infeasible tile would either crash Mosaic or thrash, and either way timing
+it wastes sweep budget. The spec-default config is never pruned — it is
+what dispatch falls back to anyway, so it must stay the measured baseline.
+
 Cache location: `$REPRO_TUNING_CACHE`, else `~/.cache/repro/kernel_tuning.json`.
+Misses fall through to the checked-in cache (`kernels/tuned/ci_cache.json`),
+which pins the winners for the CI / nightly-benchmark shapes so fresh
+checkouts dispatch with tuned blocks from the first call.
 `benchmarks/bench_kernels.py` exercises the sweep and archives the winners.
 """
 
@@ -31,7 +41,12 @@ import jax
 from repro.kernels import registry
 
 _ENV_CACHE = "REPRO_TUNING_CACHE"
+_ENV_VMEM_LIMIT = "REPRO_VMEM_LIMIT_MB"
 _SCHEMA_VERSION = 1
+_VMEM_LIMIT_MB_DEFAULT = 14.0
+
+BUNDLED_CACHE_PATH = os.path.join(os.path.dirname(__file__), "tuned",
+                                  "ci_cache.json")
 
 
 def default_cache_path() -> str:
@@ -103,6 +118,7 @@ class TuningCache:
 
 
 _DEFAULT_CACHE: Optional[TuningCache] = None
+_BUNDLED_CACHE: Optional[TuningCache] = None
 
 
 def default_cache() -> TuningCache:
@@ -112,14 +128,39 @@ def default_cache() -> TuningCache:
     return _DEFAULT_CACHE
 
 
+def bundled_cache() -> TuningCache:
+    """The read-only cache checked into the package (CI / bench shapes)."""
+    global _BUNDLED_CACHE
+    if _BUNDLED_CACHE is None:
+        _BUNDLED_CACHE = TuningCache(BUNDLED_CACHE_PATH)
+    return _BUNDLED_CACHE
+
+
 def lookup_tuned(kernel: str,
                  dims: Mapping[str, int]) -> Optional[Dict[str, int]]:
-    """Dispatch-time hook used by `KernelSpec.resolve_blocks`."""
+    """Dispatch-time hook used by `KernelSpec.resolve_blocks`.
+
+    User/process cache first; a miss falls through to the checked-in CI
+    cache so known shapes start tuned on a fresh checkout.
+    """
     try:
-        return default_cache().lookup(kernel, jax.default_backend(),
-                                      shape_bucket(dims))
+        backend = jax.default_backend()
+        bucket = shape_bucket(dims)
+        hit = default_cache().lookup(kernel, backend, bucket)
+        if hit is not None:
+            return hit
+        return bundled_cache().lookup(kernel, backend, bucket)
     except Exception:  # a corrupt cache must never break dispatch
         return None
+
+
+def vmem_limit_bytes() -> int:
+    """Autotune pruning budget (MiB via REPRO_VMEM_LIMIT_MB)."""
+    try:
+        mb = float(os.environ.get(_ENV_VMEM_LIMIT, _VMEM_LIMIT_MB_DEFAULT))
+    except ValueError:
+        mb = _VMEM_LIMIT_MB_DEFAULT
+    return int(mb * 2 ** 20)
 
 
 # ---------------------------------------------------------------------------
@@ -157,17 +198,27 @@ def autotune(name: str, args: Optional[tuple] = None, *,
     interpret = registry.interpret_mode()
 
     # Fit every candidate to the actual dims, dedupe, and always include the
-    # spec's hand-tuned defaults as the baseline candidate.
-    seen, fitted = set(), []
-    for cand in ({},) + tuple(spec.candidates):
+    # spec's hand-tuned defaults as the baseline candidate. Candidates whose
+    # modeled VMEM working set busts the budget are pruned before timing —
+    # except the defaults, which dispatch uses on a cache miss regardless.
+    limit = vmem_limit_bytes()
+    seen, fitted, pruned = set(), [], []
+    for i, cand in enumerate(({},) + tuple(spec.candidates)):
         blocks = spec.resolve_blocks(dims, overrides=cand, use_cache=False)
         key = tuple(sorted(blocks.items()))
-        if key not in seen:
-            seen.add(key)
-            fitted.append(blocks)
+        if key in seen:
+            continue
+        seen.add(key)
+        est = spec.vmem_bytes(dims, blocks) if spec.vmem_bytes else None
+        if i > 0 and est is not None and est > limit:
+            pruned.append({"blocks": blocks, "vmem_bytes": int(est)})
+            continue
+        fitted.append(blocks)
 
     report: Dict[str, Any] = {"kernel": name, "backend": backend,
-                              "bucket": bucket, "timings": []}
+                              "bucket": bucket, "timings": [],
+                              "pruned": pruned,
+                              "vmem_limit_bytes": limit}
     best_blocks, best_t = None, float("inf")
     for blocks in fitted:
         fn = jax.jit(lambda *a, _b=blocks: spec.pallas(
@@ -207,5 +258,6 @@ def autotune_all(*, cache: Optional[TuningCache] = None, repeats: int = 3,
     return reports
 
 
-__all__ = ["TuningCache", "autotune", "autotune_all", "default_cache",
-           "default_cache_path", "lookup_tuned", "shape_bucket"]
+__all__ = ["TuningCache", "autotune", "autotune_all", "bundled_cache",
+           "BUNDLED_CACHE_PATH", "default_cache", "default_cache_path",
+           "lookup_tuned", "shape_bucket", "vmem_limit_bytes"]

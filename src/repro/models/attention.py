@@ -223,6 +223,21 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, t: Array, *,
 # ---------------------------------------------------------------------------
 
 
+def _impl_attention(q: Array, k: Array, v: Array, cfg: ModelConfig,
+                    causal: bool) -> Array:
+    """cfg.attn_impl selection shared by every full-sequence caller:
+    long sequences must take the O(T*d)-memory blockwise path."""
+    T = q.shape[1]
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "blockwise" if T > 2048 else "dense"
+    if impl == "blockwise":
+        return blockwise_attention(q, k, v, causal=causal,
+                                   window=cfg.sliding_window,
+                                   block_q=cfg.block_q, block_kv=cfg.block_kv)
+    return dense_attention(q, k, v, causal=causal, window=cfg.sliding_window)
+
+
 def attention_layer(params, x: Array, cfg: ModelConfig, *,
                     positions: Optional[Array] = None,
                     causal: bool = True) -> Array:
@@ -231,15 +246,7 @@ def attention_layer(params, x: Array, cfg: ModelConfig, *,
     if positions is None:
         positions = jnp.arange(T)[None, :]
     q, k, v = qkv_project(params, x, cfg, positions)
-    impl = cfg.attn_impl
-    if impl == "auto":
-        impl = "blockwise" if T > 2048 else "dense"
-    if impl == "blockwise":
-        o = blockwise_attention(q, k, v, causal=causal,
-                                window=cfg.sliding_window,
-                                block_q=cfg.block_q, block_kv=cfg.block_kv)
-    else:
-        o = dense_attention(q, k, v, causal=causal, window=cfg.sliding_window)
+    o = _impl_attention(q, k, v, cfg, causal)
     return o.reshape(B, T, -1) @ params["wo"].astype(x.dtype)
 
 
@@ -254,6 +261,27 @@ def attention_decode_layer(params, x: Array, cache: Dict[str, Array],
     v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), t, axis=1)
     o = decode_attention(q, k_cache, v_cache, t, window=cfg.sliding_window)
     out = o.reshape(B, 1, -1) @ params["wo"].astype(x.dtype)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def attention_prefill_layer(params, x: Array, cache: Dict[str, Array],
+                            positions: Array, cfg: ModelConfig
+                            ) -> Tuple[Array, Dict[str, Array]]:
+    """Full-sequence prefill against an EMPTY cache. x: (B, L, d).
+
+    Computes causal self-attention over the prompt itself (the cache holds
+    nothing yet, so the prompt is the whole visible context) and writes K/V
+    for positions [0, L) into the cache in one shot — the batched
+    equivalent of L `attention_decode_layer` calls.
+    """
+    B, L, _ = x.shape
+    q, k_new, v_new = qkv_project(params, x, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), 0, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), 0, axis=1)
+    o = _impl_attention(q, k_new, v_new, cfg, causal=True)
+    out = o.reshape(B, L, -1) @ params["wo"].astype(x.dtype)
     return out, {"k": k_cache, "v": v_cache}
 
 

@@ -161,28 +161,55 @@ def make_prefill_step(cfg: ModelConfig):
     return prefill_step
 
 
+def sample_next(logits: Array, t: Array, greedy: bool) -> Array:
+    """Next-token choice from (B, vocab) logits at position t.
+
+    Greedy argmax (deterministic) or gumbel sampling keyed by fold_in(t) —
+    shared by the per-token decode step and the full-sequence prefill so
+    both paths pick identical tokens."""
+    logits = logits.astype(jnp.float32)
+    if greedy:
+        nxt = jnp.argmax(logits, axis=-1)
+    else:
+        key = jax.random.fold_in(jax.random.PRNGKey(17), t)
+        g = -jnp.log(-jnp.log(
+            jax.random.uniform(key, logits.shape, jnp.float32, 1e-9, 1.0)))
+        nxt = jnp.argmax(logits + g, axis=-1)
+    return nxt.astype(jnp.int32)[:, None]
+
+
 def make_serve_step(cfg: ModelConfig, *, greedy: bool = True):
     """One decode token: (params, cache, tokens (B,1), t) -> (next, cache).
 
-    Lowered for the decode_32k / long_500k dry-run cells. Sampling is greedy
-    argmax (deterministic) unless greedy=False (gumbel via fold_in(t))."""
+    Lowered for the decode_32k / long_500k dry-run cells."""
 
     def serve_step(params, cache, tokens: Array, t: Array):
         if cfg.family == "encdec":
             logits, cache = encdec_mod.decode_step(params, tokens, cache, t, cfg)
         else:
             logits, cache = tf_mod.decode_step(params, tokens, cache, t, cfg)
-        logits = logits[:, -1].astype(jnp.float32)
-        if greedy:
-            nxt = jnp.argmax(logits, axis=-1)
-        else:
-            key = jax.random.fold_in(jax.random.PRNGKey(17), t)
-            g = -jnp.log(-jnp.log(
-                jax.random.uniform(key, logits.shape, jnp.float32, 1e-9, 1.0)))
-            nxt = jnp.argmax(logits + g, axis=-1)
-        return nxt.astype(jnp.int32)[:, None], cache
+        return sample_next(logits[:, -1], t, greedy), cache
 
     return serve_step
+
+
+def can_full_prefill(cfg: ModelConfig) -> bool:
+    """Whether the family is stateless per step (KV-cache attention only),
+    so the prompt can be prefilled with ONE full-sequence forward instead
+    of a token-at-a-time scan. SSM/RWKV/hybrid carry step-recurrent state
+    and keep the scan path."""
+    return cfg.family in ("dense", "moe", "vlm")
+
+
+def make_full_prefill(cfg: ModelConfig, *, greedy: bool = True):
+    """Full-sequence prefill: (params, cache, tokens (B, L)) ->
+    (next token (B, 1) sampled at position L-1, cache filled for [0, L))."""
+
+    def full_prefill(params, cache, tokens: Array):
+        logits, cache = tf_mod.prefill_forward(params, tokens, cache, cfg)
+        return sample_next(logits[:, -1], tokens.shape[1] - 1, greedy), cache
+
+    return full_prefill
 
 
 def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None):

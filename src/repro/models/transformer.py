@@ -36,7 +36,7 @@ from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (attention_decode_layer, attention_layer,
-                                    attn_init)
+                                    attention_prefill_layer, attn_init)
 from repro.models.blocks import (embed_apply, embed_init, lm_head, mlp_apply,
                                  mlp_init, rms_norm, truncated_normal)
 from repro.models.config import ModelConfig
@@ -80,6 +80,24 @@ def _shared_attn_init(key, cfg: ModelConfig) -> P:
             "attn": attn_init(k2, cfg), "mlp": mlp_init(k3, cfg)}
 
 
+def _attn_block_body(params: P, h: Array, cfg: ModelConfig, attn_fn
+                     ) -> Tuple[Array, Any, Any]:
+    """The ONE dense/moe/vlm block definition (pre-norm attention +
+    residual scale + MLP-or-MoE), shared by the train/forward path and the
+    full-sequence prefill so the two can never drift apart. `attn_fn`
+    supplies the attention flavour: (layer params, normed x) -> (attention
+    output, extra) — extra threads the prefill path's new cache row."""
+    a, extra = attn_fn(params, rms_norm(h, params["norm1"], cfg.norm_eps))
+    h = h + cfg_residual_scale(cfg) * a
+    x2 = rms_norm(h, params["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m, moe_aux = moe_mod.moe_layer(params["moe"], x2, cfg)
+    else:
+        m = mlp_apply(params["mlp"], x2, cfg)
+        moe_aux = None
+    return h + cfg_residual_scale(cfg) * m, extra, moe_aux
+
+
 def _block_apply(params: P, h: Array, cfg: ModelConfig, aux: Dict[str, Array]
                  ) -> Tuple[Array, Dict[str, Array]]:
     """Full-sequence block body (train / prefill)."""
@@ -98,16 +116,12 @@ def _block_apply(params: P, h: Array, cfg: ModelConfig, aux: Dict[str, Array]
                               rms_norm(h, params["norm1"], cfg.norm_eps), cfg)
         return h + a, aux
     # dense / moe / vlm
-    a = attention_layer(params["attn"],
-                        rms_norm(h, params["norm1"], cfg.norm_eps), cfg)
-    h = h + cfg_residual_scale(cfg) * a
-    x2 = rms_norm(h, params["norm2"], cfg.norm_eps)
+    h, _, moe_aux = _attn_block_body(
+        params, h, cfg,
+        lambda p, xn: (attention_layer(p["attn"], xn, cfg), None))
     if cfg.family == "moe":
-        m, moe_aux = moe_mod.moe_layer(params["moe"], x2, cfg)
         aux = {k: aux.get(k, 0.0) + moe_aux[k] for k in ("lb_loss", "z_loss")}
-    else:
-        m = mlp_apply(params["mlp"], x2, cfg)
-    return h + cfg_residual_scale(cfg) * m, aux
+    return h, aux
 
 
 def cfg_residual_scale(cfg: ModelConfig) -> float:
@@ -237,6 +251,38 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype) -> P:
         return cache
     return {"k": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
             "v": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.hd), dtype)}
+
+
+def prefill_forward(params: P, tokens: Array, cache: P, cfg: ModelConfig
+                    ) -> Tuple[Array, P]:
+    """Full-sequence prefill for STATELESS (attention-family) models.
+
+    One causal forward over the (B, L) prompt that writes K/V for positions
+    [0, L) into the (empty) cache — replacing L serial `decode_step` calls;
+    the decode loop continues from position L. Families with step-recurrent
+    state (ssm / rwkv / hybrid) must keep the scan path: their cache is a
+    running state, not a position-indexed table.
+
+    Returns (logits (B, L, vocab) fp32-headed as in decode, new cache).
+    """
+    assert cfg.family in ("dense", "moe", "vlm"), cfg.family
+    dt = jnp.dtype(cfg.dtype)
+    B, L = tokens.shape
+    h = embed_apply(params["embed"], tokens, dt)
+    h = constrain(h, "data", None, None)
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+
+    def body(h, xs):
+        layer_p, cache_row = xs
+        h, new_row, _ = _attn_block_body(
+            layer_p, h, cfg,
+            lambda p, xn: attention_prefill_layer(p["attn"], xn, cache_row,
+                                                  positions, cfg))
+        return h, new_row
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_head(params["embed"], h, cfg), new_cache
 
 
 def decode_step(params: P, tokens: Array, cache: P, t: Array,

@@ -74,10 +74,25 @@ def _generate_cohort(params, cfg, cohort: List[Request],
     cache = lm.init_cache(cfg, B, S)
     serve_step = lm.make_serve_step(cfg, greedy=serve_cfg.greedy)
 
-    # prefill: feed prompt tokens one cohort-step at a time through the
-    # decode path (correct for every family incl. stateful SSM/RWKV; a
-    # full-sequence prefill kernel is the optimization, exercised by the
-    # prefill_32k dry-run cells).
+    # Prefill. Stateless (attention-family) models consume the common
+    # prompt prefix with ONE full-sequence forward that batch-writes the KV
+    # cache — L0 decode launches collapse into a single MXU-shaped pass.
+    # Stateful families (SSM/RWKV/hybrid) and the ragged tail of a
+    # mixed-length cohort still scan token-at-a-time through the decode
+    # path, which is correct for every family.
+    start = 0
+    cur = jnp.asarray(toks[:, :1])
+    L0 = int(lens.min())
+    # L0 must fit the KV cache: a prompt longer than S degrades via the
+    # scan path's clamped writes (pre-existing semantics) instead of
+    # crashing the batched cache write.
+    if lm.can_full_prefill(cfg) and 0 < L0 <= S:
+        nxt, cache = lm.make_full_prefill(cfg, greedy=serve_cfg.greedy)(
+            params, cache, jnp.asarray(toks[:, :L0]))
+        forced = jnp.asarray(toks[:, min(L0, Lp - 1):min(L0, Lp - 1) + 1])
+        cur = jnp.where(L0 < lens[:, None], forced, nxt)
+        start = L0
+
     def prefill_body(carry, t):
         cache, cur = carry
         nxt, cache = serve_step(params, cache, cur, t)
@@ -88,8 +103,7 @@ def _generate_cohort(params, cfg, cohort: List[Request],
         return (cache, cur), nxt
 
     (cache, cur), _ = jax.lax.scan(
-        prefill_body, (cache, jnp.asarray(toks[:, :1])),
-        jnp.arange(Lp))
+        prefill_body, (cache, cur), jnp.arange(start, Lp))
 
     def decode_body(carry, i):
         cache, cur = carry

@@ -1,0 +1,228 @@
+"""Plan-compiler parity: fused execution plans vs the stepper, plus the
+block-occupancy helper the hoisted INTEG relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import events, plan
+from repro.core.neuron import ALIF, LI, LIF, PLIF
+from repro.core.snn_layers import (branch_integrate, ff_integrate,
+                                   make_dhsnn_shd, make_srnn_ecg)
+from repro.kernels.spikemm.ops import block_occupancy, occupancy_fraction
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _w(key, n_in, n_out, scale=0.6):
+    return scale * jax.random.normal(key, (n_in, n_out), jnp.float32)
+
+
+def _spikes(key, shape, rate=0.3):
+    return (jax.random.uniform(key, shape) < rate).astype(jnp.float32)
+
+
+def _assert_equiv(nodes, params, x, record=(), state=None, tol=1e-5):
+    st1, o1, r1 = events.run(nodes, params, x, state=state, record=record)
+    st2, o2, r2 = plan.run(nodes, params, x, state=state, record=record)
+    np.testing.assert_allclose(o1, o2, atol=tol, rtol=tol)
+    for r in record:
+        np.testing.assert_allclose(r1[r], r2[r], atol=tol, rtol=tol)
+    for name in st1:
+        assert set(st1[name]) == set(st2[name]), name
+        for k in st1[name]:
+            np.testing.assert_allclose(st1[name][k], st2[name][k],
+                                       atol=tol, rtol=tol,
+                                       err_msg=f"{name}.{k}")
+    return st1, o1
+
+
+# ---------------------------------------------------------------------------
+# occupancy helper (the hoisted INTEG's FINDIDX bitmap)
+# ---------------------------------------------------------------------------
+
+
+def test_block_occupancy_flags():
+    s = jnp.zeros((4, 6))
+    s = s.at[0, 1].set(1.0).at[3, 5].set(1.0)
+    flags = block_occupancy(s, bm=2, bk=3)          # (2, 2) blocks
+    np.testing.assert_array_equal(np.asarray(flags),
+                                  [[1, 0], [0, 1]])
+    # negative values count as events too (currents, not just 0/1 spikes)
+    flags2 = block_occupancy(s.at[1, 4].set(-2.0), bm=2, bk=3)
+    np.testing.assert_array_equal(np.asarray(flags2), [[1, 1], [0, 1]])
+
+
+def test_occupancy_fraction_pads_to_blocks():
+    # 5x7 with one event pads to one (128, 512) block: fraction 1.0
+    s = jnp.zeros((5, 7)).at[2, 3].set(1.0)
+    assert float(occupancy_fraction(s)) == 1.0
+    assert float(occupancy_fraction(jnp.zeros((5, 7)))) == 0.0
+    # two row-blocks, events only in the first
+    s = jnp.zeros((200, 16)).at[0, 0].set(1.0)
+    assert float(occupancy_fraction(s, bm=128, bk=512)) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# plan structure
+# ---------------------------------------------------------------------------
+
+
+def test_compile_segments_and_fallback_reasons():
+    nodes = [
+        events.LayerNode("a", LIF(), ff_integrate, ("input",), 8),
+        events.LayerNode("b", ALIF(), ff_integrate, ("a",), 8),
+        events.LayerNode("c", LIF(), ff_integrate, ("b", "self"), 8),
+        events.LayerNode("d", LI(), ff_integrate, ("c",), 4),
+    ]
+    p = plan.compile_program(nodes)
+    kinds = [s.kind for s in p.segments]
+    assert kinds == [plan.FUSED_FF, plan.FALLBACK, plan.FUSED_REC,
+                     plan.FUSED_FF]
+    assert "ALIF" in p.segments[1].reason
+
+
+def test_compile_backref_forces_whole_program_fallback():
+    nodes = [
+        events.LayerNode("a", LIF(), ff_integrate, ("input", "b"), 8),
+        events.LayerNode("b", LIF(), ff_integrate, ("a",), 8),
+    ]
+    p = plan.compile_program(nodes)
+    assert p.fully_fallback and len(p.segments) == 1
+    ks = jax.random.split(KEY, 3)
+    params = {"a": {"w_input": _w(ks[0], 5, 8), "w_b": _w(ks[1], 8, 8)},
+              "b": {"w_a": _w(ks[2], 8, 8)}}
+    _assert_equiv(nodes, params, _spikes(KEY, (12, 3, 5)))
+
+
+def test_force_stepper_env(monkeypatch):
+    monkeypatch.setenv("REPRO_SNN_ENGINE", "stepper")
+    assert plan.engine_mode() == "stepper"
+    monkeypatch.setenv("REPRO_SNN_ENGINE", "bogus")
+    with pytest.raises(ValueError):
+        plan.engine_mode()
+
+
+# ---------------------------------------------------------------------------
+# numerical parity vs the stepper
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_plan_ff_stack_matches_stepper(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    nodes = [
+        events.LayerNode("h1", LIF(tau=0.85, v_th=0.7), ff_integrate,
+                         ("input",), 24),
+        events.LayerNode("h2", LIF(tau=0.9), ff_integrate, ("h1", "input"),
+                         16),
+        events.LayerNode("ro", LI(tau=0.95), ff_integrate, ("h2",), 6),
+    ]
+    params = {"h1": {"w_input": _w(ks[0], 10, 24)},
+              "h2": {"w_h1": _w(ks[1], 24, 16), "w_input": _w(ks[2], 10, 16)},
+              "ro": {"w_h2": _w(ks[3], 16, 6)}}
+    x = _spikes(ks[4], (17, 3, 10))
+    _assert_equiv(nodes, params, x, record=("h1", "h2"))
+
+
+def test_plan_recurrent_uses_lifrec():
+    ks = jax.random.split(KEY, 4)
+    nodes = [
+        events.LayerNode("h", LIF(tau=0.8, v_th=0.8), ff_integrate,
+                         ("input", "self"), 20),
+        events.LayerNode("ro", LI(tau=0.9), ff_integrate, ("h",), 4),
+    ]
+    params = {"h": {"w_input": _w(ks[0], 7, 20),
+                    "w_self": _w(ks[1], 20, 20, scale=0.3)},
+              "ro": {"w_h": _w(ks[2], 20, 4)}}
+    p = plan.compile_program(nodes)
+    assert p.segments[0].kind == plan.FUSED_REC
+    _assert_equiv(nodes, params, _spikes(ks[3], (19, 2, 7), rate=0.4))
+
+
+def test_plan_delayed_feeds_fused_and_fallback():
+    """'@d' reads of fused sources must match the stepper's ring buffers —
+    both when the reader is fused and when it sits in a fallback segment."""
+    ks = jax.random.split(KEY, 6)
+    nodes = [
+        events.LayerNode("a", LIF(tau=0.5, v_th=0.6), ff_integrate,
+                         ("input",), 12),
+        events.LayerNode("b", LIF(tau=0.7), ff_integrate, ("a@2",), 10),
+        events.LayerNode("c", ALIF(), ff_integrate, ("a@3", "b@1"), 8),
+        events.LayerNode("ro", LI(), ff_integrate, ("c", "b"), 4),
+    ]
+    params = {"a": {"w_input": _w(ks[0], 6, 12)},
+              "b": {"w_a": _w(ks[1], 12, 10)},
+              "c": {"w_a": _w(ks[2], 12, 8), "w_b": _w(ks[3], 10, 8)},
+              "ro": {"w_c": _w(ks[4], 8, 4), "w_b": _w(ks[5], 10, 4)}}
+    x = _spikes(KEY, (15, 2, 6), rate=0.5)
+    st, _ = _assert_equiv(nodes, params, x, record=("a", "b", "c"))
+    # delay shorter than ring depth and T shorter than delays still agree
+    _assert_equiv(nodes, params, x[:2])
+    # resuming from a mid-run state must thread ring contents through
+    _assert_equiv(nodes, params, x, state=st)
+
+
+def test_plan_heterogeneous_taus_plif():
+    ks = jax.random.split(KEY, 3)
+    neuron = PLIF()
+    nodes = [
+        events.LayerNode("h", neuron, ff_integrate, ("input",), 16),
+        events.LayerNode("ro", LI(), ff_integrate, ("h",), 4),
+    ]
+    params = {"h": {"w_input": _w(ks[0], 5, 16),
+                    "neuron": {"w_tau": 2.0 + jax.random.normal(ks[1], (16,))}},
+              "ro": {"w_h": _w(ks[2], 16, 4)}}
+    p = plan.compile_program(nodes)
+    assert p.segments[0].kind == plan.FUSED_FF
+    _assert_equiv(nodes, params, _spikes(KEY, (14, 3, 5), rate=0.4))
+
+
+def test_plan_app_models_parity():
+    """All three Program-based application-model variants agree with the
+    stepper (BCI is not a Program; its fused LIF is exercised by
+    test_events_and_apps)."""
+    cases = [
+        make_srnn_ecg(jax.random.PRNGKey(0), heterogeneous=True, n_hidden=24),
+        make_srnn_ecg(jax.random.PRNGKey(1), heterogeneous=False, n_hidden=24),
+        make_dhsnn_shd(jax.random.PRNGKey(2), n_hidden=16),
+        make_dhsnn_shd(jax.random.PRNGKey(3), n_hidden=16, dendritic=False),
+    ]
+    for i, (nodes, params) in enumerate(cases):
+        n_in = 4 if i < 2 else 700
+        x = _spikes(jax.random.PRNGKey(10 + i), (12, 2, n_in), rate=0.25)
+        _assert_equiv(nodes, params, x, record=("hidden",))
+
+
+def test_plan_gradients_match_stepper():
+    """Training through the plan path (spikemm/lif/lifrec/linrec custom
+    VJPs) must give the stepper's STBP gradients."""
+    nodes, params = make_srnn_ecg(jax.random.PRNGKey(4), heterogeneous=False,
+                                  n_hidden=20)
+    x = _spikes(KEY, (15, 3, 4), rate=0.4)
+
+    def make_loss(run_fn):
+        def loss(p):
+            _, o, _ = run_fn(nodes, p, x)
+            return jnp.sum(jnp.sin(o * 1.3))
+        return loss
+
+    g1 = jax.grad(make_loss(events.run))(params)
+    g2 = jax.grad(make_loss(plan.run))(params)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=2e-4,
+                                                         rtol=2e-4), g1, g2)
+
+
+def test_plan_runs_under_jit():
+    nodes, params = make_dhsnn_shd(jax.random.PRNGKey(5), n_hidden=16,
+                                   dendritic=False)
+    x = _spikes(KEY, (10, 2, 700), rate=0.1)
+
+    @jax.jit
+    def f(p, xx):
+        _, o, _ = plan.run(nodes, p, xx)
+        return o
+
+    _, o_ref, _ = events.run(nodes, params, x)
+    np.testing.assert_allclose(f(params, x), o_ref, atol=1e-5, rtol=1e-5)

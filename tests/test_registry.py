@@ -21,8 +21,8 @@ ALL_KERNELS = registry.names()
 
 
 def test_all_families_registered():
-    assert set(ALL_KERNELS) == {"linrec", "lif", "spikemm", "attention",
-                                "stdp"}
+    assert set(ALL_KERNELS) == {"linrec", "lif", "lifrec", "spikemm",
+                                "attention", "stdp"}
     for name in ALL_KERNELS:
         spec = registry.get(name)
         assert spec.make_inputs is not None, name
@@ -109,13 +109,15 @@ def test_lif_time_axis_never_padded():
 
 
 def test_dispatch_policy_env(monkeypatch):
+    from repro.kernels.common import on_tpu
+
     monkeypatch.setenv("REPRO_KERNEL_IMPL", "pallas")
     assert registry.use_pallas(False)
     monkeypatch.setenv("REPRO_KERNEL_IMPL", "ref")
     assert not registry.use_pallas(False)
     assert registry.use_pallas(True)          # explicit force always wins
     monkeypatch.delenv("REPRO_KERNEL_IMPL")
-    assert not registry.use_pallas(False)     # auto: conservative default
+    assert registry.use_pallas(False) == on_tpu()  # auto: pallas on TPU only
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +179,55 @@ def test_autotune_persists_winner_and_dispatch_uses_it(tmp_path,
     other_dims = {"T": 4 * dims["T"], "B": dims["B"], "D": dims["D"]}
     default_blocks = spec.resolve_blocks(other_dims, use_cache=False)
     assert spec.resolve_blocks(other_dims) == default_blocks
+
+
+def test_autotune_prunes_vmem_hogs(tmp_path, monkeypatch):
+    """With a tiny VMEM budget every non-default candidate is pruned before
+    timing; the spec-default baseline must survive and win."""
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "t.json"))
+    monkeypatch.setenv("REPRO_VMEM_LIMIT_MB", "0.01")
+    spec = registry.get("lif")
+    # serving-scale shape: candidates fit to DISTINCT block configs (the
+    # canonical parity inputs are so small they all collapse to one)
+    k = jax.random.PRNGKey(0)
+    args = (0.6 * jax.random.normal(k, (256, 8, 512)),
+            jnp.full((512,), 0.9), jnp.zeros((8, 512)))
+    blocks, report = tuning.autotune("lif", args, repeats=1)
+    assert report["pruned"], "expected candidates above the 10 KiB budget"
+    assert len([t for t in report["timings"] if "best_s" in t]) >= 1
+    defaults = spec.resolve_blocks(spec.dims_of(*args), use_cache=False)
+    assert blocks == defaults
+
+
+def test_every_spec_has_vmem_model():
+    for name in ALL_KERNELS:
+        spec = registry.get(name)
+        assert spec.vmem_bytes is not None, name
+        args = spec.make_inputs(jax.random.PRNGKey(0))
+        dims = spec.dims_of(*args)
+        blocks = spec.resolve_blocks(dims, use_cache=False)
+        est = spec.vmem_bytes(dims, blocks)
+        assert 0 < est < 2 ** 30, (name, est)
+
+
+def test_bundled_cache_fallback(tmp_path, monkeypatch):
+    """A user-cache miss falls through to the checked-in CI cache; a user
+    entry for the same bucket wins over the bundled one."""
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "user.json"))
+    spec = registry.get("spikemm")
+    args = spec.make_inputs(jax.random.PRNGKey(0))
+    dims = spec.dims_of(*args)
+    bucket = tuning.shape_bucket(dims)
+    bundled = tuning.bundled_cache().lookup("spikemm", jax.default_backend(),
+                                            bucket)
+    if bundled is None:
+        pytest.skip(f"no bundled entry for backend/bucket {bucket}")
+    assert tuning.lookup_tuned("spikemm", dims) == bundled
+
+    planted = {"bm": 8, "bk": 128, "bn": 128}
+    tuning.default_cache().put("spikemm", jax.default_backend(), bucket,
+                               planted)
+    assert tuning.lookup_tuned("spikemm", dims) == planted
 
 
 def test_tuned_blocks_still_produce_correct_results(tmp_path, monkeypatch):

@@ -1,0 +1,98 @@
+"""Full-sequence prefill vs the token-at-a-time scan path: identical caches,
+logits, and generated tokens for the stateless attention families."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.models import transformer as tf_mod
+from repro.serve.loop import Request, ServeConfig, generate
+
+
+def _cfg(arch):
+    return get_smoke_config(arch).replace(dtype="float32")
+
+
+def _generate_both(cfg, monkeypatch_target=None):
+    params = lm.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(1, 200, size=n).astype(np.int32), max_new=5)
+            for n in (5, 9, 9, 3)]
+    scfg = ServeConfig(batch=4, max_seq=48)
+    out_fast = generate(params, cfg, reqs, scfg)
+    orig = lm.can_full_prefill
+    try:
+        lm.can_full_prefill = lambda c: False
+        out_scan = generate(params, cfg, reqs, scfg)
+    finally:
+        lm.can_full_prefill = orig
+    return out_fast, out_scan
+
+
+def test_prefill_forward_matches_decode_steps_dense():
+    cfg = _cfg("llama3.2-3b")
+    params = lm.model_init(jax.random.PRNGKey(1), cfg)
+    B, L, S = 2, 7, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, L), 1, 200)
+    cache0 = lm.init_cache(cfg, B, S)
+
+    logits_full, cache_full = tf_mod.prefill_forward(params, toks, cache0, cfg)
+
+    cache_step = cache0
+    step_logits = []
+    for t in range(L):
+        lg, cache_step = tf_mod.decode_step(params, toks[:, t:t + 1],
+                                            cache_step, jnp.asarray(t), cfg)
+        step_logits.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(logits_full[:, -1]),
+                               np.asarray(step_logits[-1]),
+                               atol=1e-4, rtol=1e-4)
+    for k in ("k", "v"):
+        np.testing.assert_allclose(np.asarray(cache_full[k]),
+                                   np.asarray(cache_step[k]),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_generate_dense_full_prefill_token_identical():
+    out_fast, out_scan = _generate_both(_cfg("llama3.2-3b"))
+    for a, b in zip(out_fast, out_scan):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_generate_with_empty_prompt_in_cohort():
+    """L0 = 0 must skip the full-sequence prefill (logits[:, -1] on a
+    zero-length axis would crash) and fall back to the scan path."""
+    cfg = _cfg("llama3.2-3b")
+    params = lm.model_init(jax.random.PRNGKey(0), cfg)
+    reqs = [Request(np.array([], np.int32), max_new=3),
+            Request(np.array([5, 7], np.int32), max_new=3)]
+    out = generate(params, cfg, reqs, ServeConfig(batch=2, max_seq=16))
+    assert [o.shape for o in out] == [(3,), (3,)]
+
+
+def test_generate_prompt_longer_than_cache_degrades_not_crashes():
+    """A prompt exceeding S = min(max_seq, Lp + max_new) must take the scan
+    path's clamped-write semantics (pre-existing behavior), not crash the
+    full-prefill batched cache write."""
+    cfg = _cfg("llama3.2-3b")
+    params = lm.model_init(jax.random.PRNGKey(0), cfg)
+    reqs = [Request(np.arange(1, 61, dtype=np.int32), max_new=3)]
+    out = generate(params, cfg, reqs, ServeConfig(batch=1, max_seq=48))
+    assert out[0].shape == (3,)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "olmoe-1b-7b",
+                                  "zamba2-1.2b"])
+def test_generate_families_token_identical(arch):
+    """qwen2: qkv-bias + sliding window; olmoe: moe; zamba2: hybrid keeps
+    the scan path (can_full_prefill False) and must be unaffected."""
+    cfg = _cfg(arch)
+    out_fast, out_scan = _generate_both(cfg)
+    for a, b in zip(out_fast, out_scan):
+        np.testing.assert_array_equal(a, b)
+    if cfg.family == "hybrid":
+        assert not lm.can_full_prefill(cfg)
