@@ -2,11 +2,15 @@
 paper's application models through both SNN execution engines.
 
 The generic stepper (`events.run`) interprets a Program timestep by
-timestep; the plan compiler (`core/plan.py`) hoists INTEG out of the time
-scan (one all-T spikemm per feed) and fuses FIRE into whole-(T,B,N) kernel
-launches (`lif` / `lifrec` / `linrec`). This suite measures what that
-lowering is worth per workload — including the fallback-heavy ones (ALIF,
-DH-LIF), where only the readout fuses and the speedup is honest about it.
+timestep; the plan compiler (`core/plan.py`) pattern-matches each node's
+NeuronProgram, hoists INTEG out of the time scan (one all-T spikemm per
+feed, branch-flattened for dendritic models) and fuses FIRE into
+whole-(T,B,N) kernel launches (`lif` / `lifrec` / `alif` / `alifrec` /
+`linrec`). Since the neuron-program IR landed, ALL application models fuse
+with zero fallback segments — the ALIF (`srnn_ecg_alif`, `shd_alif_ff`)
+and DH-LIF (`shd_dhlif`) hidden-layer rows exist precisely to track the
+newly fused dynamics' stepper-vs-plan ratio nightly, next to the LIF rows
+that fused from the start.
 
 The headline row is `shd_ff`, the DHSNN-SHD-shaped feed-forward stack
 (700 -> 64 LIF -> 20 LI readout) at streaming batch: the stepper pays T
@@ -26,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import events, plan
-from repro.core.snn_layers import make_dhsnn_shd, make_srnn_ecg
+from repro.core.neuron import ALIF, LI
+from repro.core.snn_layers import ff_integrate, make_dhsnn_shd, make_srnn_ecg
 from repro.kernels.spikemm.ops import occupancy_fraction
 
 
@@ -43,14 +48,27 @@ def _workloads(key) -> List[Tuple[str, list, dict, jax.Array]]:
     x64 = (jax.random.uniform(k1, (250, 64, 700)) < 0.08).astype(jnp.float32)
     out.append(("shd_ff", nodes, params, x1))
     out.append(("shd_ff_b64", nodes, params, x64))
-    # full DH-LIF model: branch integrate falls back, readout fuses
+    # full DH-LIF model: branch-integrate prologue (linrec) + fused soma lif
     nodes, params = make_dhsnn_shd(k2, n_hidden=64, dendritic=True)
     out.append(("shd_dhlif", nodes, params, x4))
+    # SHD-shaped ALIF feed-forward hidden: the `alif` kernel family
+    alif_nodes = [events.LayerNode("hidden", ALIF(beta=0.5), ff_integrate,
+                                   ("input",), 64),
+                  events.LayerNode("readout", LI(tau=0.97), ff_integrate,
+                                   ("hidden",), 20)]
+    ka, kb, kc = jax.random.split(k2, 3)
+    alif_params = {
+        "hidden": {"w_input": (1.0 / jnp.sqrt(700.0)) *
+                   jax.random.normal(ka, (700, 64)),
+                   "neuron": ALIF().param_init(kb, (64,))},
+        "readout": {"w_hidden": (1.0 / 8.0) * jax.random.normal(kc, (64, 20))},
+    }
+    out.append(("shd_alif_ff", alif_nodes, alif_params, x4))
     # SRNN-ECG homogeneous: recurrent hidden -> lifrec kernel path
     nodes, params = make_srnn_ecg(k3, heterogeneous=False, n_hidden=64)
     xe = (jax.random.uniform(k3, (200, 4, 4)) < 0.3).astype(jnp.float32)
     out.append(("srnn_ecg_rec", nodes, params, xe))
-    # SRNN-ECG heterogeneous: ALIF hidden falls back, LI readout fuses
+    # SRNN-ECG heterogeneous: recurrent ALIF hidden -> alifrec kernel path
     nodes, params = make_srnn_ecg(k3, heterogeneous=True, n_hidden=64)
     out.append(("srnn_ecg_alif", nodes, params, xe))
     return out

@@ -2,18 +2,20 @@
 
 1. program a heterogeneous spiking network with the neuron DSL,
 2. encode its topology with the 2-level tables (storage accounting),
-3. run it through the event-driven INTEG/FIRE engine,
+3. compile + run it through the fused execution-plan engine,
 4. map it onto the chip grid with the compiler,
 5. estimate energy with the behavioural simulator.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+(Set REPRO_SNN_EXPLAIN=1 to see the compiled segment schedule for every
+Program anywhere in the stack, not just the one printed here.)
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import events, topology
+from repro.core import events, plan, topology
 from repro.core.mapping import Op, compile_network
 from repro.core.neuron import ALIF, LI
 from repro.core.simulator import LayerStats, simulate
@@ -42,9 +44,16 @@ print(f"topology: {enc.storage_bits()/8:.0f} B encoded vs "
       f"{enc.baseline_bits()/8:.0f} B unrolled "
       f"({enc.baseline_bits()/enc.storage_bits():.0f}x smaller)")
 
-# 3. event-driven run: 100 timesteps of sparse input spikes
+# 3. compile the Program to a fused execution plan and run it: the ALIF
+# hidden layer pattern-matches the adaptive-threshold kernel (fused_rec via
+# `alifrec`), the LI readout the associative `linrec` scan — no stepper
+# fallback. `plan.run` is a drop-in for `events.run` (same signature and
+# numerics; REPRO_SNN_ENGINE=stepper brings the interpreted engine back).
+compiled = plan.compile_program(nodes)
+print(f"plan: {compiled.describe()}")
 x = (jax.random.uniform(key, (100, 8, n_in)) < 0.05).astype(jnp.float32)
-_, outs, recs = events.run(nodes, params, x, record=("hidden",))
+_, outs, recs = plan.run(nodes, params, x, record=("hidden",),
+                         plan=compiled)
 rate = float(jnp.mean(recs["hidden"]))
 print(f"ran 100 INTEG/FIRE timesteps: hidden spike rate {rate:.1%}, "
       f"readout shape {outs.shape}")

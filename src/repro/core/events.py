@@ -51,8 +51,17 @@ def _parse_src(src: str) -> Tuple[str, int]:
     return src, 0
 
 
+def state_dtype(dtype) -> jnp.dtype:
+    """Neuron state must be float: integer spike inputs (common for encoded
+    datasets) would otherwise build integer membranes that truncate every
+    DIFF step. Callers pass x.dtype; ints coerce to float32."""
+    dtype = jnp.dtype(dtype)
+    return dtype if jnp.issubdtype(dtype, jnp.floating) else jnp.dtype(jnp.float32)
+
+
 def init_state(nodes: List[LayerNode], batch: int, dtype=jnp.float32):
     """Neuron states + skip-delay ring buffers for every node."""
+    dtype = state_dtype(dtype)
     state = {}
     max_delay: Dict[str, int] = {}
     for n in nodes:

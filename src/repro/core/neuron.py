@@ -10,23 +10,35 @@ primitives every neuron model is written in:
   (RECV is implicit: a neuron's step function runs when events arrive — on
    TPU, when its timestep slice is scanned.)
 
-A neuron model is a `NeuronSpec`: `init_state(shape)` plus a `step(state,
-current) -> (state, spikes)` written only in terms of the primitives. The
-INTEG/FIRE split of the chip (§IV-A) maps onto `integrate` (current
-accumulation happens outside, in the layer) and `fire` (this module).
+The FIRE stage itself is *declarative*: a neuron model is a
+`NeuronProgram` — a list of DIFF state updates (each `StateVar` declares
+its decay source and its drive), a threshold expression, a reset rule, and
+an output selector — interpreted by one generic `NeuronSpec.fire`. Because
+the dynamics are data rather than opaque Python, the execution-plan
+compiler (`core/plan.py`) pattern-matches the program structure and lowers
+matching programs to fused whole-time-axis kernels; anything else runs on
+the always-correct stepper. This mirrors the chip's multi-granularity ISA
+(§IV, Table I): user-defined dynamics compile onto the same substrate as
+the built-ins instead of hitting a closed neuron menu.
 
-Models provided (all used by the paper's applications, §V-B3):
+Models provided (all used by the paper's applications, §V-B3), each a thin
+dataclass factory producing its program:
   LIF     eqs. (1)-(3)
   PLIF    LIF with learnable decay (parameterized via sigmoid)
   ALIF    adaptive threshold (Yin et al. 2021) — ECG SRNN hidden layer
   DHLIF   multi-branch dendritic LIF (Zheng et al. 2024) — SHD speech task
   LI      non-spiking leaky-integrator readout (DHSNN/SRNN output layers)
+
+Custom models: build a `NeuronProgram`, wrap it in `ProgramNeuron`, and
+(optionally) `register_neuron("myneuron", factory)` so configs and CLIs can
+name it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,28 +85,230 @@ def findidx(bitmap: Array, packed_weights: Array, axon_id) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# Neuron specs
+# the neuron-program IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Decay:
+    """Where a state's DIFF decay comes from.
+
+    kind:   "const"      — fixed `value` for every neuron
+            "learned"    — sigmoid(params[param]), per-neuron logits;
+                           `value` is the fallback when params are absent
+            "per_branch" — like "learned" but the logits carry a leading
+                           branch axis (shape (n_branches, n))
+    """
+
+    kind: str = "const"
+    value: float = 0.9
+    param: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class StateVar:
+    """One DIFF state update: state' = decay * state + drive.
+
+    drive:  "current"      — the INTEG-stage input current
+            "spikes"       — this step's emitted spikes (updates AFTER the
+                             threshold fires, e.g. ALIF's adaptation trace)
+            "sum:<state>"  — branch-sum of another (branch) state, e.g. the
+                             DH-LIF soma integrating its dendrites
+    branch: the state carries a leading dendritic-branch axis
+            (shape (..., n_branches, n)); its drive arrives per branch.
+    """
+
+    name: str
+    decay: Decay
+    drive: str = "current"
+    branch: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Threshold:
+    """Spike condition: fire where  state[on] >= base + scale * state[adapt].
+
+    `adapt=""` is the constant threshold; ALIF's moving threshold is
+    `Threshold(base=v_th, adapt="a", scale=beta)`. The adaptation state is
+    read at its pre-update (previous-step) value when it is spike-driven.
+    """
+
+    base: float = 1.0
+    on: str = "v"
+    adapt: str = ""
+    scale: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class NeuronProgram:
+    """Declarative FIRE-stage dynamics.
+
+    threshold=None describes a non-spiking integrator (no reset either);
+    reset "zero" is the hard reset of eq. (3), "none" skips it; output is
+    "spikes" or the name of a state to read out (LI reads its membrane).
+    """
+
+    states: Tuple[StateVar, ...]
+    threshold: Optional[Threshold] = None
+    reset: str = "zero"
+    output: str = "spikes"
+    n_branches: int = 1
+
+
+def validate_program(prog: NeuronProgram) -> NeuronProgram:
+    """Raise ValueError on a structurally invalid program; return it."""
+    names = [sv.name for sv in prog.states]
+    if not names:
+        raise ValueError("program needs at least one state")
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate state names: {names}")
+    for sv in prog.states:
+        if sv.decay.kind not in ("const", "learned", "per_branch"):
+            raise ValueError(f"state {sv.name!r}: bad decay kind "
+                             f"{sv.decay.kind!r}")
+        if sv.decay.kind != "const" and not sv.decay.param:
+            raise ValueError(f"state {sv.name!r}: {sv.decay.kind} decay "
+                             "needs a param name")
+        if sv.decay.kind == "per_branch" and not sv.branch:
+            raise ValueError(f"state {sv.name!r}: per_branch decay on a "
+                             "non-branch state")
+        if sv.drive.startswith("sum:"):
+            src = sv.drive[4:]
+            if src not in names:
+                raise ValueError(f"state {sv.name!r} sums unknown state "
+                                 f"{src!r}")
+            if not next(s for s in prog.states if s.name == src).branch:
+                raise ValueError(f"state {sv.name!r} sums non-branch state "
+                                 f"{src!r}")
+            if sv.branch:
+                raise ValueError(f"branch state {sv.name!r} cannot be "
+                                 "sum-driven")
+        elif sv.drive == "spikes":
+            if prog.threshold is None:
+                raise ValueError(f"state {sv.name!r} is spike-driven but "
+                                 "the program never spikes")
+        elif sv.drive != "current":
+            raise ValueError(f"state {sv.name!r}: bad drive {sv.drive!r}")
+    if prog.threshold is not None:
+        th = prog.threshold
+        if th.on not in names:
+            raise ValueError(f"threshold on unknown state {th.on!r}")
+        if next(s for s in prog.states if s.name == th.on).branch:
+            raise ValueError("threshold cannot fire on a branch state")
+        if th.adapt:
+            if th.adapt not in names:
+                raise ValueError(f"threshold adapts on unknown state "
+                                 f"{th.adapt!r}")
+            if next(s for s in prog.states if s.name == th.adapt).branch:
+                raise ValueError("threshold cannot adapt on a branch state")
+    if prog.reset not in ("zero", "none"):
+        raise ValueError(f"bad reset {prog.reset!r}")
+    if prog.output != "spikes":
+        if prog.output not in names:
+            raise ValueError(f"output selects unknown state {prog.output!r}")
+        if next(s for s in prog.states if s.name == prog.output).branch:
+            raise ValueError("output cannot select a branch state")
+    if prog.output == "spikes" and prog.threshold is None:
+        raise ValueError("spike output needs a threshold")
+    if prog.n_branches < 1:
+        raise ValueError(f"n_branches must be >= 1, got {prog.n_branches}")
+    return prog
+
+
+def decay_array(decay: Decay, params: Optional[Dict[str, Array]],
+                dtype) -> Array:
+    """Resolve a Decay to a concrete decay factor in (0, 1)."""
+    if decay.kind != "const" and params and decay.param in params:
+        return jax.nn.sigmoid(params[decay.param]).astype(dtype)
+    return jnp.asarray(decay.value, dtype)
+
+
+def program_fire(prog: NeuronProgram, state: State, current: Array,
+                 params: Optional[Dict[str, Any]], surrogate: str,
+                 alpha: float) -> Tuple[State, Array]:
+    """Interpret one FIRE-stage step of a NeuronProgram.
+
+    Phase order: current-/sum-driven states update first (in declaration
+    order, so a sum-driven soma sees its branches' NEW values), then the
+    threshold fires and resets, then spike-driven states integrate the
+    fresh spikes — exactly the per-model closed forms the programs replace.
+    """
+    dtype = current.dtype
+    vals = {sv.name: state[sv.name] for sv in prog.states}
+    for sv in prog.states:
+        if sv.drive == "spikes":
+            continue
+        c = (current if sv.drive == "current"
+             else jnp.sum(vals[sv.drive[4:]], axis=-2))
+        vals[sv.name] = diff(vals[sv.name], decay_array(sv.decay, params,
+                                                        dtype), c)
+    if prog.threshold is None:
+        return vals, vals[prog.output]
+    th = prog.threshold
+    level = th.base + (th.scale * vals[th.adapt] if th.adapt else 0.0)
+    s = spike(vals[th.on] - level, surrogate, alpha)
+    if prog.reset == "zero":
+        vals[th.on] = vals[th.on] * (1.0 - s)
+    for sv in prog.states:
+        if sv.drive == "spikes":
+            vals[sv.name] = diff(vals[sv.name], decay_array(sv.decay, params,
+                                                            dtype), s)
+    return vals, (s if prog.output == "spikes" else vals[prog.output])
+
+
+# ---------------------------------------------------------------------------
+# Neuron specs (thin factories over programs)
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class NeuronSpec:
-    """Base class: a programmable neuron is (init_state, fire)."""
+    """Base class: a programmable neuron is a NeuronProgram plus the
+    surrogate-gradient choice; `init_state` and `fire` are generic
+    interpreters over `self.program`."""
 
     surrogate: str = "rectangle"
     alpha: float = 1.0
 
-    def init_state(self, shape, dtype=jnp.float32) -> State:
+    @property
+    def program(self) -> NeuronProgram:
         raise NotImplementedError
 
-    def fire(self, state: State, current: Array, params: Dict[str, Any] | None = None
-             ) -> Tuple[State, Array]:
+    def init_state(self, shape, dtype=jnp.float32) -> State:
+        prog = self.program
+        state = {}
+        for sv in prog.states:
+            s = (shape[:-1] + (prog.n_branches,) + shape[-1:] if sv.branch
+                 else tuple(shape))
+            state[sv.name] = jnp.zeros(s, dtype)
+        return state
+
+    def fire(self, state: State, current: Array,
+             params: Dict[str, Any] | None = None) -> Tuple[State, Array]:
         """One FIRE-stage update given the INTEG-stage current."""
-        raise NotImplementedError
+        return program_fire(self.program, state, current, params,
+                            self.surrogate, self.alpha)
 
     def param_init(self, key, shape) -> Dict[str, Array]:
         """Learnable per-neuron parameters (empty for fixed models)."""
         return {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramNeuron(NeuronSpec):
+    """A NeuronSpec defined directly by its program — the user-space entry
+    point for custom dynamics. Validates at construction; fusable patterns
+    (see `plan._match_fire_pattern`) get kernel lowering for free."""
+
+    prog: NeuronProgram = NeuronProgram(
+        states=(StateVar("v", Decay("const", 0.9)),), threshold=Threshold())
+
+    def __post_init__(self):
+        validate_program(self.prog)
+
+    @property
+    def program(self) -> NeuronProgram:
+        return self.prog
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,14 +318,11 @@ class LIF(NeuronSpec):
     tau: float = 0.9
     v_th: float = 1.0
 
-    def init_state(self, shape, dtype=jnp.float32):
-        return {"v": jnp.zeros(shape, dtype)}
-
-    def fire(self, state, current, params=None):
-        v = diff(state["v"], jnp.asarray(self.tau, current.dtype), current)
-        s = spike(v - self.v_th, self.surrogate, self.alpha)
-        v = v * (1.0 - s)                       # reset-to-zero (eq. 3)
-        return {"v": v}, s
+    @property
+    def program(self) -> NeuronProgram:
+        return NeuronProgram(
+            states=(StateVar("v", Decay("const", self.tau)),),
+            threshold=Threshold(base=self.v_th))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,18 +336,15 @@ class PLIF(NeuronSpec):
     v_th: float = 1.0
     tau_init: float = 2.0     # sigmoid(2.0) ~= 0.88
 
-    def init_state(self, shape, dtype=jnp.float32):
-        return {"v": jnp.zeros(shape, dtype)}
+    @property
+    def program(self) -> NeuronProgram:
+        fallback = 1.0 / (1.0 + math.exp(-self.tau_init))
+        return NeuronProgram(
+            states=(StateVar("v", Decay("learned", fallback, "w_tau")),),
+            threshold=Threshold(base=self.v_th))
 
     def param_init(self, key, shape):
         return {"w_tau": jnp.full(shape[-1:], self.tau_init, jnp.float32)}
-
-    def fire(self, state, current, params=None):
-        tau = jax.nn.sigmoid(params["w_tau"]).astype(current.dtype)
-        v = diff(state["v"], tau, current)
-        s = spike(v - self.v_th, self.surrogate, self.alpha)
-        v = v * (1.0 - s)
-        return {"v": v}, s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,8 +361,13 @@ class ALIF(NeuronSpec):
     beta: float = 1.8        # adaptation strength
     v_th: float = 1.0
 
-    def init_state(self, shape, dtype=jnp.float32):
-        return {"v": jnp.zeros(shape, dtype), "a": jnp.zeros(shape, dtype)}
+    @property
+    def program(self) -> NeuronProgram:
+        return NeuronProgram(
+            states=(StateVar("v", Decay("learned", self.tau, "w_tau")),
+                    StateVar("a", Decay("learned", self.rho, "w_rho"),
+                             drive="spikes")),
+            threshold=Threshold(base=self.v_th, adapt="a", scale=self.beta))
 
     def param_init(self, key, shape):
         # heterogeneous time constants: learnable logits around the defaults
@@ -164,20 +377,6 @@ class ALIF(NeuronSpec):
             "w_tau": jnp.log(self.tau / (1 - self.tau)) + 0.5 * jax.random.normal(k1, (n,)),
             "w_rho": jnp.log(self.rho / (1 - self.rho)) + 0.5 * jax.random.normal(k2, (n,)),
         }
-
-    def fire(self, state, current, params=None):
-        if params:
-            tau = jax.nn.sigmoid(params["w_tau"]).astype(current.dtype)
-            rho = jax.nn.sigmoid(params["w_rho"]).astype(current.dtype)
-        else:
-            tau = jnp.asarray(self.tau, current.dtype)
-            rho = jnp.asarray(self.rho, current.dtype)
-        v = diff(state["v"], tau, current)
-        th = self.v_th + self.beta * state["a"]
-        s = spike(v - th, self.surrogate, self.alpha)
-        v = v * (1.0 - s)
-        a = diff(state["a"], rho, s)            # DIFF drives adaptation too
-        return {"v": v, "a": a}, s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,28 +395,25 @@ class DHLIF(NeuronSpec):
     n_branches: int = 4
     tau: float = 0.9
     v_th: float = 1.0
+    tau_s_init: float = 2.0   # soma-decay logit; sigmoid(2.0) ~= 0.88
 
-    def init_state(self, shape, dtype=jnp.float32):
-        # shape is the soma shape (..., n); branch states add an axis.
-        branch_shape = shape[:-1] + (self.n_branches,) + shape[-1:]
-        return {"v": jnp.zeros(shape, dtype), "d": jnp.zeros(branch_shape, dtype)}
+    @property
+    def program(self) -> NeuronProgram:
+        soma_fallback = 1.0 / (1.0 + math.exp(-self.tau_s_init))
+        return NeuronProgram(
+            states=(StateVar("d", Decay("per_branch", self.tau, "w_tau_d"),
+                             branch=True),
+                    StateVar("v", Decay("learned", soma_fallback, "w_tau_s"),
+                             drive="sum:d")),
+            threshold=Threshold(base=self.v_th),
+            n_branches=self.n_branches)
 
     def param_init(self, key, shape):
         n = shape[-1]
         # heterogeneous branch time constants — log-spaced around tau
         base = jnp.linspace(1.0, 6.0, self.n_branches)[:, None]
         return {"w_tau_d": jnp.broadcast_to(base, (self.n_branches, n)),
-                "w_tau_s": jnp.full((n,), 2.0)}
-
-    def fire(self, state, current, params=None):
-        tau_d = jax.nn.sigmoid(params["w_tau_d"]).astype(current.dtype)
-        tau_s = jax.nn.sigmoid(params["w_tau_s"]).astype(current.dtype)
-        d = diff(state["d"], tau_d, current)    # per-branch DIFF
-        soma_in = jnp.sum(d, axis=-2)           # dendrites -> soma
-        v = diff(state["v"], tau_s, soma_in)
-        s = spike(v - self.v_th, self.surrogate, self.alpha)
-        v = v * (1.0 - s)
-        return {"v": v, "d": d}, s
+                "w_tau_s": jnp.full((n,), self.tau_s_init)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -231,15 +427,14 @@ class LI(NeuronSpec):
 
     tau: float = 0.95
 
-    def init_state(self, shape, dtype=jnp.float32):
-        return {"v": jnp.zeros(shape, dtype)}
+    @property
+    def program(self) -> NeuronProgram:
+        return NeuronProgram(
+            states=(StateVar("v", Decay("const", self.tau)),),
+            threshold=None, reset="none", output="v")
 
-    def fire(self, state, current, params=None):
-        v = diff(state["v"], jnp.asarray(self.tau, current.dtype), current)
-        return {"v": v}, v                       # "spikes" = membrane readout
 
-
-NEURON_REGISTRY = {
+NEURON_REGISTRY: Dict[str, Callable[..., NeuronSpec]] = {
     "lif": LIF,
     "plif": PLIF,
     "alif": ALIF,
@@ -248,5 +443,21 @@ NEURON_REGISTRY = {
 }
 
 
+def register_neuron(name: str, factory: Callable[..., NeuronSpec], *,
+                    override: bool = False) -> Callable[..., NeuronSpec]:
+    """Open the neuron menu: name a factory (class or function returning a
+    NeuronSpec) so configs/CLIs can `make_neuron(name)` it. Duplicate names
+    raise unless `override=True` (deliberate replacement)."""
+    if not override and name in NEURON_REGISTRY:
+        raise ValueError(f"neuron {name!r} already registered "
+                         f"({NEURON_REGISTRY[name]!r}); pass override=True "
+                         "to replace it")
+    NEURON_REGISTRY[name] = factory
+    return factory
+
+
 def make_neuron(name: str, **kwargs) -> NeuronSpec:
+    if name not in NEURON_REGISTRY:
+        raise KeyError(f"unknown neuron {name!r}; registered: "
+                       f"{sorted(NEURON_REGISTRY)}")
     return NEURON_REGISTRY[name](**kwargs)

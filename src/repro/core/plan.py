@@ -6,23 +6,34 @@ through HBM every step, and the INTEG matmuls run at (B, fan_in) — far too
 skinny to feed the MXU. But most Program structure is static: which node
 feeds which, with what delay, through which neuron dynamics. This module
 analyzes that structure once and emits a plan of *segments*, each executed
-over the whole time axis at once:
+over the whole time axis at once.
 
-  fused_ff    A node whose inputs are all same-timestep feeds from earlier
-              segments (or the external input). INTEG is hoisted out of the
-              time loop entirely — one registry-dispatched `spikemm` over
-              the (T*B, fan_in) spike matrix (block-occupancy flags = the
-              FINDIDX bitmap at MXU granularity) — and FIRE becomes one
-              time-fused kernel over the (T, B, N) current block:
-              `lif` for LIF/PLIF, `linrec` for LI readouts.
-  fused_rec   Same hoisted INTEG for the feed-forward part, plus the
-              `lifrec` kernel for the self-connection: recurrent weights
-              stay resident in VMEM and time runs serially inside the
-              kernel (LIF/PLIF + "self").
-  fallback    Everything the planner can't fuse yet (ALIF moving threshold,
-              DHLIF branch integrate, non-tagged integrate functions) runs
-              through the stepper — per segment, with the fused neighbours'
-              full-time outputs (delay-shifted as needed) fed in externally.
+Since the neuron API became declarative (`core/neuron.py::NeuronProgram`),
+classification is *structural pattern matching on the IR* — there is no
+per-class dispatch, so user-registered programs fuse whenever their shape
+matches a kernel pattern:
+
+  pattern (on the program)                          FIRE lowering
+  ------------------------------------------------  -------------------
+  1 state, current-driven, no threshold, membrane    `linrec` (associative
+  output                                             all-T scan)
+  1 state, current-driven, constant threshold, hard   `lif` (+ `lifrec`
+  reset, spike output                                 when self-recurrent)
+  2 states {membrane + spike-driven adaptation},      `alif` (+ `alifrec`
+  affine threshold in the adaptation, hard reset      when self-recurrent)
+  2 states {branch dendrites + sum-driven soma},      branch-integrate
+  constant threshold, hard reset                      prologue (`linrec`
+                                                      over the branch axis)
+                                                      feeding `lif`
+
+INTEG is hoisted out of the time loop for every fused segment: one
+registry-dispatched `spikemm` over the (T*B, fan_in) spike matrix per feed
+(block-occupancy flags = the FINDIDX bitmap at MXU granularity); the
+branch convention (`snn_layers.branch_integrate`) hoists as one spikemm
+against the branch-flattened weight tensor. Everything that matches no
+pattern (extra states, soft resets, untagged integrates, recurrent branch
+programs) runs through the stepper — per segment, with the fused
+neighbours' full-time outputs (delay-shifted as needed) fed in externally.
 
 Delayed ("src@d") reads of a *fused* source are exact: the ring buffer the
 stepper would maintain is just a time-shift of the source's full output
@@ -33,9 +44,10 @@ reads a *later* node (previous-timestep semantics) compiles to a single
 whole-program fallback segment, i.e. exactly `events.run`. Every Program
 runs; fusable ones run fast.
 
-Env knob: REPRO_SNN_ENGINE = plan | stepper | auto (auto = plan). Set
+Env knobs: REPRO_SNN_ENGINE = plan | stepper | auto (auto = plan; set
 `stepper` to force the interpreted engine, e.g. when bisecting a numerics
-difference.
+difference). REPRO_SNN_EXPLAIN=1 prints every compiled segment schedule
+(`Plan.describe()`) as Programs are lowered.
 """
 
 from __future__ import annotations
@@ -48,7 +60,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import events
-from repro.core.neuron import LI, LIF, PLIF
+from repro.core.neuron import Decay, NeuronProgram
+from repro.kernels.alifrec.ops import alif_scan, alifrec_scan
 from repro.kernels.lif.ops import lif_scan
 from repro.kernels.lifrec.ops import lifrec_scan
 from repro.kernels.linrec.ops import linrec
@@ -59,6 +72,12 @@ Array = jax.Array
 FUSED_FF = "fused_ff"
 FUSED_REC = "fused_rec"
 FALLBACK = "fallback"
+
+# FIRE lowering families the pattern matcher can emit
+LOWER_LI = "li"
+LOWER_LIF = "lif"
+LOWER_ALIF = "alif"
+LOWER_DHLIF = "dhlif"
 
 
 def engine_mode() -> str:
@@ -76,6 +95,7 @@ class Segment:
     kind: str                  # fused_ff | fused_rec | fallback
     names: Tuple[str, ...]     # node names (fused segments hold exactly one)
     reason: str = ""           # why the planner fell back (diagnostics)
+    lower: str = ""            # FIRE kernel family for fused segments
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,46 +110,108 @@ class Plan:
         parts = []
         for s in self.segments:
             tag = f"{s.kind}[{','.join(s.names)}]"
+            if s.lower:
+                tag += f":{s.lower}"
             if s.reason:
                 tag += f"({s.reason})"
             parts.append(tag)
         return " -> ".join(parts)
 
 
-def _hoistable(node: events.LayerNode) -> bool:
-    """INTEG can be hoisted iff the integrate fn declares the `w_<src>`
-    matmul convention (see `snn_layers.ff_integrate`)."""
-    return getattr(node.integrate, "hoist", None) == "ff"
+def _hoist_tag(node: events.LayerNode) -> Optional[str]:
+    """INTEG hoist convention: "ff" = per-feed `s @ w_<src>` matmuls
+    (`snn_layers.ff_integrate`), "branch" = the single-feed dendritic
+    einsum (`snn_layers.branch_integrate`). Custom integrates opt in by
+    setting `.hoist`; untagged integrates keep the stepper."""
+    return getattr(node.integrate, "hoist", None)
+
+
+def _match_fire_pattern(prog: NeuronProgram) -> Tuple[Optional[str], str]:
+    """Structurally match a NeuronProgram against the fused FIRE kernels.
+
+    Returns (lowering family, "") on a match, else (None, reason). Driven
+    ONLY by program structure — any user program with a matching shape
+    (<= 2 coupled linear states + threshold + hard reset, or a pure leaky
+    integrator) fuses, whatever Python class built it.
+    """
+    th = prog.threshold
+    if not prog.states:
+        return None, "empty program"
+    if th is None:
+        sv = prog.states[0]
+        if (len(prog.states) == 1 and not sv.branch
+                and sv.drive == "current" and prog.output == sv.name):
+            return LOWER_LI, ""
+        return None, "unfusable non-spiking program"
+    if prog.output != "spikes":
+        return None, "state readout on a spiking program"
+    if prog.reset != "zero":
+        return None, f"reset={prog.reset}"
+    mem = next((s for s in prog.states if s.name == th.on), None)
+    if mem is None or mem.branch:
+        return None, "threshold not on a plain membrane state"
+    others = [s for s in prog.states if s.name != th.on]
+    if mem.drive == "current" and not others and not th.adapt:
+        return LOWER_LIF, ""
+    if (mem.drive == "current" and len(others) == 1
+            and others[0].drive == "spikes" and not others[0].branch
+            and th.adapt == others[0].name):
+        return LOWER_ALIF, ""
+    if (len(others) == 1 and others[0].branch
+            and others[0].drive == "current"
+            and mem.drive == f"sum:{others[0].name}" and not th.adapt):
+        # the prologue feeds the soma the branches' NEW values, which is the
+        # interpreter's semantics only when the branch state updates first
+        names = [s.name for s in prog.states]
+        if names.index(others[0].name) < names.index(mem.name):
+            return LOWER_DHLIF, ""
+        return None, "soma declared before its branches"
+    return None, "program shape matches no fused FIRE kernel"
 
 
 def _classify(node: events.LayerNode, order: Dict[str, int]
-              ) -> Tuple[str, str]:
-    """-> (segment kind, fallback reason)."""
-    if not _hoistable(node):
-        return FALLBACK, "integrate not hoistable"
+              ) -> Tuple[str, str, str]:
+    """-> (segment kind, fallback reason, lowering family)."""
+    hoist = _hoist_tag(node)
+    if hoist not in ("ff", "branch"):
+        return FALLBACK, "integrate not hoistable", ""
     n_self = 0
     for src in node.inputs:
         name, d = events._parse_src(src)
         if name == "self":
             if d:
-                return FALLBACK, "delayed self"
+                return FALLBACK, "delayed self", ""
             n_self += 1
         elif name != "input" and order[name] >= order[node.name]:
             # previous-timestep read of a later node: handled by caller
             # (whole-program fallback); unreachable here, kept for safety
-            return FALLBACK, "back reference"
+            return FALLBACK, "back reference", ""
     if n_self > 1:
-        return FALLBACK, "multiple self feeds"
-    neuron = node.neuron
+        return FALLBACK, "multiple self feeds", ""
+    try:
+        prog = node.neuron.program
+    except NotImplementedError:
+        return FALLBACK, "neuron declares no program", ""
+    family, why = _match_fire_pattern(prog)
+    if family is None:
+        return FALLBACK, why, ""
+    needs_branch = family == LOWER_DHLIF
+    if needs_branch != (hoist == "branch"):
+        return FALLBACK, (f"{family} program needs "
+                          f"{'branch' if needs_branch else 'ff'} integrate, "
+                          f"got {hoist}"), ""
+    if hoist == "branch":
+        n_feeds = sum(1 for src in node.inputs
+                      if events._parse_src(src)[0] != "self")
+        if n_feeds != 1:
+            # the branch convention hoists exactly one feed through w_input;
+            # extra feeds would be silently dropped
+            return FALLBACK, f"branch integrate with {n_feeds} feeds", ""
     if n_self:
-        if type(neuron) in (LIF, PLIF):
-            return FUSED_REC, ""
-        return FALLBACK, f"recurrent {type(neuron).__name__}"
-    if type(neuron) in (LIF, PLIF):
-        return FUSED_FF, ""
-    if type(neuron) is LI:
-        return FUSED_FF, ""
-    return FALLBACK, type(neuron).__name__
+        if family in (LOWER_LIF, LOWER_ALIF):
+            return FUSED_REC, "", family
+        return FALLBACK, f"recurrent {family}", ""
+    return FUSED_FF, "", family
 
 
 def compile_program(nodes: List[events.LayerNode]) -> Plan:
@@ -137,35 +219,44 @@ def compile_program(nodes: List[events.LayerNode]) -> Plan:
     order = {n.name: i for i, n in enumerate(nodes)}
     # Any previous-timestep read of a later node couples the whole Program
     # per-timestep: compile to one stepper segment (exactly events.run).
+    plan = None
     for n in nodes:
         for src in n.inputs:
             name, _ = events._parse_src(src)
             if name not in ("input", "self") and order[name] >= order[n.name]:
-                return Plan((Segment(FALLBACK, tuple(x.name for x in nodes),
+                plan = Plan((Segment(FALLBACK, tuple(x.name for x in nodes),
                                      f"{n.name} reads later node {name}"),))
+                break
+        if plan:
+            break
 
-    segments: List[Segment] = []
-    pending_fallback: List[str] = []
-    pending_reason = ""
+    if plan is None:
+        segments: List[Segment] = []
+        pending_fallback: List[str] = []
+        pending_reason = ""
 
-    def flush():
-        nonlocal pending_fallback, pending_reason
-        if pending_fallback:
-            segments.append(Segment(FALLBACK, tuple(pending_fallback),
-                                    pending_reason))
-            pending_fallback, pending_reason = [], ""
+        def flush():
+            nonlocal pending_fallback, pending_reason
+            if pending_fallback:
+                segments.append(Segment(FALLBACK, tuple(pending_fallback),
+                                        pending_reason))
+                pending_fallback, pending_reason = [], ""
 
-    for n in nodes:
-        kind, reason = _classify(n, order)
-        if kind == FALLBACK:
-            pending_fallback.append(n.name)
-            pending_reason = (pending_reason + "; " if pending_reason
-                              else "") + f"{n.name}: {reason}"
-        else:
-            flush()
-            segments.append(Segment(kind, (n.name,)))
-    flush()
-    return Plan(tuple(segments))
+        for n in nodes:
+            kind, reason, family = _classify(n, order)
+            if kind == FALLBACK:
+                pending_fallback.append(n.name)
+                pending_reason = (pending_reason + "; " if pending_reason
+                                  else "") + f"{n.name}: {reason}"
+            else:
+                flush()
+                segments.append(Segment(kind, (n.name,), lower=family))
+        flush()
+        plan = Plan(tuple(segments))
+
+    if os.environ.get("REPRO_SNN_EXPLAIN") == "1":
+        print(f"[repro.plan] {plan.describe()}")
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -195,14 +286,31 @@ def _feed_full(outs: Dict[str, Array], state: Dict[str, Any], name: str,
 def _advance_ring(ring: Array, out_full: Array) -> Array:
     """Ring state after the whole run: ring[k] = out_{T-1-k}, seeded from
     the initial ring for T < k."""
-    stacked = jnp.concatenate([ring[::-1], out_full], axis=0)
+    stacked = jnp.concatenate([ring[::-1], out_full.astype(ring.dtype)], axis=0)
     return stacked[-ring.shape[0]:][::-1]
 
 
 def _hoisted_current(node: events.LayerNode, params: Dict[str, Any],
                      outs: Dict[str, Array], state: Dict[str, Any],
                      T: int, B: int) -> Array:
-    """All-T INTEG: one event-gated spikemm per inbound feed."""
+    """All-T INTEG: one event-gated spikemm per inbound feed.
+
+    The "branch" convention hoists the dendritic einsum as a single
+    spikemm against the branch-flattened (n_in, K*n_out) weight view,
+    yielding a (T, B, K, n_out) per-branch current block.
+    """
+    if _hoist_tag(node) == "branch":
+        src = next(s for s in node.inputs
+                   if events._parse_src(s)[0] != "self")
+        name, d = events._parse_src(src)
+        s = _feed_full(outs, state, name, d, T)
+        w = params[node.name]["w_input"]             # (K, n_in, n_out)
+        K, n_in, n_out = w.shape
+        if not jnp.issubdtype(s.dtype, jnp.floating):
+            s = s.astype(w.dtype)
+        w2 = jnp.transpose(w, (1, 0, 2)).reshape(n_in, K * n_out)
+        c = spikemm(s.reshape(T * B, -1), w2)
+        return c.reshape(T, B, K, n_out)
     cur = None
     for src in node.inputs:
         name, d = events._parse_src(src)
@@ -210,40 +318,92 @@ def _hoisted_current(node: events.LayerNode, params: Dict[str, Any],
             continue
         s = _feed_full(outs, state, name, d, T)
         w = params[node.name][f"w_{name}"]
+        if not jnp.issubdtype(s.dtype, jnp.floating):
+            s = s.astype(w.dtype)                    # int spikes: match locacc
         c = spikemm(s.reshape(T * B, -1), w).reshape(T, B, -1)
         cur = c if cur is None else cur + c
     if cur is None:
-        cur = jnp.zeros((T, B, node.out_dim), outs["input"].dtype)
+        cur = jnp.zeros((T, B, node.out_dim),
+                        events.state_dtype(outs["input"].dtype))
     return cur
 
 
-def _tau_vector(node: events.LayerNode, params: Dict[str, Any]) -> Array:
-    neuron = node.neuron
-    if type(neuron) is PLIF:
-        return jax.nn.sigmoid(
-            params[node.name]["neuron"]["w_tau"].astype(jnp.float32))
-    return jnp.full((node.out_dim,), neuron.tau, jnp.float32)
+def _decay_vec(decay: Decay, nparams: Optional[Dict[str, Array]], n: int,
+               n_branches: int = 0) -> Array:
+    """Resolve a program Decay to the kernel-facing fp32 decay tensor:
+    (N,) for per-neuron states, (K, N) for branch states."""
+    shape = (n_branches, n) if n_branches else (n,)
+    p = (nparams or {}).get(decay.param) if decay.kind != "const" else None
+    if p is not None:
+        return jnp.broadcast_to(jax.nn.sigmoid(p.astype(jnp.float32)), shape)
+    return jnp.full(shape, decay.value, jnp.float32)
 
 
-def _run_fused(node: events.LayerNode, kind: str, params: Dict[str, Any],
-               outs: Dict[str, Array], state: Dict[str, Any],
-               new_state: Dict[str, Any], T: int, B: int) -> None:
+def _run_fused(node: events.LayerNode, kind: str, lower: str,
+               params: Dict[str, Any], outs: Dict[str, Array],
+               state: Dict[str, Any], new_state: Dict[str, Any],
+               T: int, B: int) -> None:
     cur = _hoisted_current(node, params, outs, state, T, B)
-    neuron = node.neuron
-    v0 = state[node.name]["v"]
-    if type(neuron) is LI:
-        a = jnp.broadcast_to(jnp.asarray(neuron.tau, cur.dtype), cur.shape)
-        out, vT = linrec(a, cur, v0)
-    elif kind == FUSED_REC:
-        out, vT = lifrec_scan(cur, params[node.name]["w_self"],
-                              _tau_vector(node, params), v0,
-                              state[node.name]["out"], neuron.v_th,
-                              neuron.surrogate, neuron.alpha)
-    else:
-        out, vT = lif_scan(cur, _tau_vector(node, params), v0, neuron.v_th,
-                           neuron.surrogate, neuron.alpha)
+    prog = node.neuron.program
+    nparams = params.get(node.name, {}).get("neuron")
+    sur, alpha = node.neuron.surrogate, node.neuron.alpha
+    th = prog.threshold
+    N = node.out_dim
+
+    if lower == LOWER_LI:
+        sv = prog.states[0]
+        tau = _decay_vec(sv.decay, nparams, N)
+        a = jnp.broadcast_to(tau.astype(cur.dtype), cur.shape)
+        out, vT = linrec(a, cur, state[node.name][sv.name])
+        ns = {sv.name: vT}
+    elif lower == LOWER_LIF:
+        tau = _decay_vec(prog.states[0].decay, nparams, N)
+        v0 = state[node.name][th.on]
+        if kind == FUSED_REC:
+            out, vT = lifrec_scan(cur, params[node.name]["w_self"], tau, v0,
+                                  state[node.name]["out"], th.base, sur,
+                                  alpha)
+        else:
+            out, vT = lif_scan(cur, tau, v0, th.base, sur, alpha)
+        ns = {th.on: vT}
+    elif lower == LOWER_ALIF:
+        mem = next(s for s in prog.states if s.name == th.on)
+        ad = next(s for s in prog.states if s.name == th.adapt)
+        tau = _decay_vec(mem.decay, nparams, N)
+        rho = _decay_vec(ad.decay, nparams, N)
+        v0, a0 = state[node.name][mem.name], state[node.name][ad.name]
+        if kind == FUSED_REC:
+            out, vT, aT = alifrec_scan(cur, params[node.name]["w_self"], tau,
+                                       rho, v0, a0, state[node.name]["out"],
+                                       th.base, th.scale, sur, alpha)
+        else:
+            out, vT, aT = alif_scan(cur, tau, rho, v0, a0, th.base, th.scale,
+                                    sur, alpha)
+        ns = {mem.name: vT, ad.name: aT}
+    elif lower == LOWER_DHLIF:
+        # branch-integrate prologue: the dendrites never reset, so they are
+        # a pure linear recurrence -> associative all-T linrec over the
+        # branch-flattened axis, summed into the soma's LIF kernel.
+        mem = next(s for s in prog.states if s.name == th.on)
+        br = next(s for s in prog.states if s.branch)
+        d0 = state[node.name][br.name]               # (B, K, N)
+        K = d0.shape[-2]
+        tau_d = _decay_vec(br.decay, nparams, N, n_branches=K)
+        a = jnp.broadcast_to(tau_d.astype(cur.dtype)[None],
+                             (B, K, N)).reshape(B * K, N)
+        a = jnp.broadcast_to(a[None], (T, B * K, N))
+        d_full, dT = linrec(a, cur.reshape(T, B * K, N),
+                            d0.reshape(B * K, N))
+        soma_cur = jnp.sum(d_full.reshape(T, B, K, N), axis=2)
+        tau_s = _decay_vec(mem.decay, nparams, N)
+        out, vT = lif_scan(soma_cur, tau_s, state[node.name][mem.name],
+                           th.base, sur, alpha)
+        ns = {mem.name: vT, br.name: dT.reshape(B, K, N)}
+    else:  # pragma: no cover - compile_program only emits known families
+        raise ValueError(f"unknown FIRE lowering {lower!r}")
+
     outs[node.name] = out
-    ns = {"v": vT, "out": out[-1]}
+    ns["out"] = out[-1]
     if "ring" in state[node.name]:
         ns["ring"] = _advance_ring(state[node.name]["ring"], out)
     new_state[node.name] = ns
@@ -302,11 +462,12 @@ def run(nodes: List[events.LayerNode], params: Dict[str, Any], x: Array,
             _run_fallback(seg, nodes_by_name, params, x, outs, state,
                           new_state, T)
         else:
-            _run_fused(nodes_by_name[seg.names[0]], seg.kind, params, outs,
-                       state, new_state, T, B)
+            _run_fused(nodes_by_name[seg.names[0]], seg.kind, seg.lower,
+                       params, outs, state, new_state, T, B)
     recs = {r: outs[r] for r in record}
     return new_state, outs[nodes[-1].name], recs
 
 
 __all__ = ["Plan", "Segment", "compile_program", "engine_mode", "run",
-           "FUSED_FF", "FUSED_REC", "FALLBACK"]
+           "FUSED_FF", "FUSED_REC", "FALLBACK", "LOWER_LI", "LOWER_LIF",
+           "LOWER_ALIF", "LOWER_DHLIF"]

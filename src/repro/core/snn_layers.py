@@ -68,6 +68,12 @@ def branch_integrate(params, feeds):
     return jnp.einsum("bi,kio->bko", s, params["w_input"])
 
 
+# The "branch" hoist convention: single feed, weights (n_branches, n_in,
+# n_out) under the fixed key `w_input`. The plan compiler lifts the einsum
+# out of the time loop as one spikemm against the (n_in, K*n_out) view.
+branch_integrate.hoist = "branch"
+
+
 # ---------------------------------------------------------------------------
 # SRNN for ECG (QTDB)
 # ---------------------------------------------------------------------------

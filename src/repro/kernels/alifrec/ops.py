@@ -1,0 +1,302 @@
+"""Public fused adaptive-threshold LIF entry points with STBP VJPs.
+
+Forward dispatches through the kernel registry (`alif` feed-forward family,
+`alifrec` self-recurrent family). Backward is STBP through every coupling
+of the adaptive recurrence:
+
+    u_t  = tau v_{t-1} + c_t [+ s_{t-1} @ W]    (pre-reset potential)
+    th_t = v_th + beta a_{t-1}
+    s_t  = H(u_t - th_t)
+    v_t  = u_t (1 - s_t)
+    a_t  = rho a_{t-1} + s_t
+
+With Gu_t = dL/du_t, Gv_t/Ga_t the accumulated membrane/adaptation
+cotangents, gs_t the external spike cotangent, and g() the surrogate
+window, the adaptation trace adds two terms relative to `lif`/`lifrec`:
+a_t collects its spike directly (Gs~ gains Ga_t) and the moving threshold
+back-propagates -beta through the Heaviside argument:
+
+    Gs~_t = gs_t + Ga_t [+ Gu_{t+1} @ W^T]
+    Sig_t = (Gs~_t - Gv_t u_t) g(u_t - th_t)        (through the spike)
+    Gu_t  = Gv_t (1 - s_t) + Sig_t
+    Gv_{t-1} = tau Gu_t
+    Ga_{t-1} = rho Ga_t - beta Sig_t
+    dL/dc_t = Gu_t          dL/dtau = sum Gu_t v_{t-1}
+    dL/drho = sum Ga_t a_{t-1}
+    dL/dW   = sum s_{t-1}^T Gu_t     dL/ds0 = Gu_0 @ W^T
+    dL/dv0  = tau Gu_0               dL/da0 = rho Ga_0 - beta Sig_0
+
+u and the state sequences are recomputed forward from (c, s) instead of
+being stored — the same storage/recompute trade `lif/ops.py` makes.
+v_th and beta are static hyperparameters (non-learnable floats in every
+program threshold), so no cotangent is produced for them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.surrogate import _SURROGATES
+from repro.kernels import registry
+from repro.kernels.common import pad_axis
+from repro.kernels.alifrec.kernel import alif_pallas, alifrec_pallas
+from repro.kernels.alifrec.ref import alif_scan_ref, alifrec_scan_ref
+
+
+def _alif_pallas_impl(current, tau, rho, v0, a0, *, blocks, interpret,
+                      v_th=1.0, beta=1.8):
+    T, B, N = current.shape
+    ct, bb, bn = blocks["ct"], blocks["bb"], blocks["bn"]
+    # 'ct' is an exact-policy axis (see lif/ops.py): zero-padded time steps
+    # would keep decaying v and a past T, so non-divisors must fail loudly.
+    assert T % ct == 0, (T, ct)
+    c_p, _ = pad_axis(current, 1, bb)
+    c_p, _ = pad_axis(c_p, 2, bn)
+    tau_p, _ = pad_axis(tau, 0, bn, value=1.0)
+    rho_p, _ = pad_axis(rho, 0, bn, value=1.0)
+    v0_p, _ = pad_axis(v0, 0, bb)
+    v0_p, _ = pad_axis(v0_p, 1, bn)
+    a0_p, _ = pad_axis(a0, 0, bb)
+    a0_p, _ = pad_axis(a0_p, 1, bn)
+    s, vT, aT = alif_pallas(c_p, tau_p, rho_p, v0_p, a0_p, v_th=v_th,
+                            beta=beta, ct=ct, bb=bb, bn=bn,
+                            interpret=interpret)
+    return s[:T, :B, :N], vT[:B, :N], aT[:B, :N]
+
+
+def _alifrec_pallas_impl(current, w_rec, tau, rho, v0, a0, s0, *, blocks,
+                         interpret, v_th=1.0, beta=1.8):
+    T, B, N = current.shape
+    ct, bb = blocks["ct"], blocks["bb"]
+    assert T % ct == 0, (T, ct)
+    c_p, _ = pad_axis(current, 1, bb)
+    c_p, _ = pad_axis(c_p, 2, 128)
+    w_p, _ = pad_axis(w_rec.astype(current.dtype), 0, 128)
+    w_p, _ = pad_axis(w_p, 1, 128)
+    tau_p, _ = pad_axis(tau, 0, 128, value=1.0)
+    rho_p, _ = pad_axis(rho, 0, 128, value=1.0)
+    args = []
+    for x in (v0, a0, s0):
+        x_p, _ = pad_axis(x, 0, bb)
+        x_p, _ = pad_axis(x_p, 1, 128)
+        args.append(x_p)
+    s, vT, aT = alifrec_pallas(c_p, w_p, tau_p, rho_p, *args, v_th=v_th,
+                               beta=beta, ct=ct, bb=bb, interpret=interpret)
+    return s[:T, :B, :N], vT[:B, :N], aT[:B, :N]
+
+
+# ---------------------------------------------------------------------------
+# shared STBP backward core (w_rec=None selects the feed-forward adjoint)
+# ---------------------------------------------------------------------------
+
+
+def _bwd_core(current, w_rec, tau, rho, v0, a0, s0, s, cts, v_th, beta,
+              surrogate, alpha):
+    gs, gvT, gaT = cts
+    g_fn = _SURROGATES[surrogate]
+    tau32 = tau.astype(jnp.float32)
+    rho32 = rho.astype(jnp.float32)
+    w32 = None if w_rec is None else w_rec.astype(jnp.float32)
+    c32 = current.astype(jnp.float32)
+    s32 = s.astype(jnp.float32)
+    s0_32 = (jnp.zeros_like(v0, jnp.float32) if s0 is None
+             else s0.astype(jnp.float32))
+
+    def fwd_body(carry, ts):
+        v, a, s_prev = carry
+        c_t, s_t = ts
+        u = tau32 * v + c_t
+        if w32 is not None:
+            u = u + s_prev @ w32
+        return ((u * (1.0 - s_t), rho32 * a + s_t, s_t),
+                (u, v, a, s_prev))           # v, a are the t-1 values
+
+    _, (u, v_prev, a_prev, s_prev) = jax.lax.scan(
+        fwd_body, (v0.astype(jnp.float32), a0.astype(jnp.float32), s0_32),
+        (c32, s32))
+    surr = g_fn(u - (v_th + beta * a_prev), jnp.asarray(alpha, jnp.float32))
+
+    def bwd_body(carry, ts):
+        gv, ga, gu_next = carry
+        gs_t, u_t, s_t, surr_t = ts
+        gs_tot = gs_t + ga
+        if w32 is not None:
+            gs_tot = gs_tot + gu_next @ w32.T
+        sig = (gs_tot - gv * u_t) * surr_t
+        gu = gv * (1.0 - s_t) + sig
+        return (tau32 * gu, rho32 * ga - beta * sig, gu), (gu, ga)
+
+    zero_gu = jnp.zeros(gs.shape[1:], jnp.float32)
+    (gv_end, ga_end, _), (gu, ga_seq) = jax.lax.scan(
+        bwd_body, (gvT.astype(jnp.float32), gaT.astype(jnp.float32), zero_gu),
+        (gs.astype(jnp.float32), u, s32, surr), reverse=True)
+
+    g_current = gu.astype(current.dtype)
+    g_tau = jnp.sum(gu * v_prev, axis=(0, 1)).astype(tau.dtype)
+    g_rho = jnp.sum(ga_seq * a_prev, axis=(0, 1)).astype(rho.dtype)
+    g_v0 = gv_end.astype(v0.dtype)
+    g_a0 = ga_end.astype(a0.dtype)
+    if w32 is None:
+        return g_current, g_tau, g_rho, g_v0, g_a0
+    g_w = jnp.einsum("tbi,tbj->ij", s_prev, gu).astype(w_rec.dtype)
+    g_s0 = (gu[0] @ w32.T).astype(s0.dtype)
+    return g_current, g_w, g_tau, g_rho, g_v0, g_a0, g_s0
+
+
+# ---------------------------------------------------------------------------
+# feed-forward family: alif
+# ---------------------------------------------------------------------------
+
+
+def _alif_fwd_impl(current, tau, rho, v0, a0, v_th, beta, force_pallas):
+    return registry.dispatch("alif", (current, tau, rho, v0, a0),
+                             force_pallas=force_pallas, v_th=v_th, beta=beta)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def alif_scan(current: jax.Array, tau: jax.Array, rho: jax.Array,
+              v0: jax.Array, a0: jax.Array, v_th: float = 1.0,
+              beta: float = 1.8, surrogate: str = "rectangle",
+              alpha: float = 1.0, force_pallas: bool = False):
+    """Fused adaptive-threshold LIF over time. current: (T,B,N);
+    tau/rho: (N,); v0/a0: (B,N).
+
+    Returns (spikes (T,B,N), v_final (B,N), a_final (B,N)). STBP-diff'able.
+    """
+    return _alif_fwd_impl(current, tau, rho, v0, a0, v_th, beta, force_pallas)
+
+
+def _alif_fwd(current, tau, rho, v0, a0, v_th, beta, surrogate, alpha,
+              force_pallas):
+    s, vT, aT = _alif_fwd_impl(current, tau, rho, v0, a0, v_th, beta,
+                               force_pallas)
+    return (s, vT, aT), (current, tau, rho, v0, a0, s)
+
+
+def _alif_bwd(v_th, beta, surrogate, alpha, force_pallas, res, cts):
+    current, tau, rho, v0, a0, s = res
+    return _bwd_core(current, None, tau, rho, v0, a0, None, s, cts, v_th,
+                     beta, surrogate, alpha)
+
+
+alif_scan.defvjp(_alif_fwd, _alif_bwd)
+
+
+# ---------------------------------------------------------------------------
+# self-recurrent family: alifrec
+# ---------------------------------------------------------------------------
+
+
+def _alifrec_fwd_impl(current, w_rec, tau, rho, v0, a0, s0, v_th, beta,
+                      force_pallas):
+    return registry.dispatch("alifrec", (current, w_rec, tau, rho, v0, a0,
+                                         s0),
+                             force_pallas=force_pallas, v_th=v_th, beta=beta)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11))
+def alifrec_scan(current: jax.Array, w_rec: jax.Array, tau: jax.Array,
+                 rho: jax.Array, v0: jax.Array, a0: jax.Array, s0: jax.Array,
+                 v_th: float = 1.0, beta: float = 1.8,
+                 surrogate: str = "rectangle", alpha: float = 1.0,
+                 force_pallas: bool = False):
+    """Fused self-recurrent adaptive-threshold LIF. current: (T,B,N);
+    w_rec: (N,N); tau/rho: (N,); v0/a0/s0: (B,N).
+
+    Returns (spikes (T,B,N), v_final (B,N), a_final (B,N)). STBP/BPTT.
+    """
+    return _alifrec_fwd_impl(current, w_rec, tau, rho, v0, a0, s0, v_th,
+                             beta, force_pallas)
+
+
+def _alifrec_fwd(current, w_rec, tau, rho, v0, a0, s0, v_th, beta, surrogate,
+                 alpha, force_pallas):
+    s, vT, aT = _alifrec_fwd_impl(current, w_rec, tau, rho, v0, a0, s0, v_th,
+                                  beta, force_pallas)
+    return (s, vT, aT), (current, w_rec, tau, rho, v0, a0, s0, s)
+
+
+def _alifrec_bwd(v_th, beta, surrogate, alpha, force_pallas, res, cts):
+    current, w_rec, tau, rho, v0, a0, s0, s = res
+    return _bwd_core(current, w_rec, tau, rho, v0, a0, s0, s, cts, v_th,
+                     beta, surrogate, alpha)
+
+
+alifrec_scan.defvjp(_alifrec_fwd, _alifrec_bwd)
+
+
+# ---------------------------------------------------------------------------
+# registration
+# ---------------------------------------------------------------------------
+
+
+def _make_alif_inputs(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    T, B, N = 20, 3, 130                      # non-multiples exercise padding
+    current = 0.8 * jax.random.normal(k1, (T, B, N), jnp.float32)
+    tau = jax.random.uniform(k2, (N,), jnp.float32, 0.7, 0.98)
+    rho = jax.random.uniform(k3, (N,), jnp.float32, 0.85, 0.99)
+    v0 = jnp.zeros((B, N), jnp.float32)
+    a0 = jnp.zeros((B, N), jnp.float32)
+    return current, tau, rho, v0, a0
+
+
+def _make_alifrec_inputs(key):
+    k1, k2 = jax.random.split(key)
+    current, tau, rho, v0, a0 = _make_alif_inputs(k1)
+    N = current.shape[2]
+    w_rec = (0.4 / jnp.sqrt(N)) * jax.random.normal(k2, (N, N), jnp.float32)
+    return current, w_rec, tau, rho, v0, a0, jnp.zeros_like(v0)
+
+
+registry.register(registry.KernelSpec(
+    name="alif",
+    ref=alif_scan_ref,
+    pallas=_alif_pallas_impl,
+    apply=lambda args, force=False: alif_scan(*args, 1.0, 1.8, "rectangle",
+                                              1.0, force),
+    block_axes=(registry.BlockAxis("ct", "T", preferred=256, align=8,
+                                   exact=True),
+                registry.BlockAxis("bb", "B", preferred=8, align=8),
+                registry.BlockAxis("bn", "N", preferred=512, align=128)),
+    dims_of=lambda current, tau, rho, v0, a0: {"T": current.shape[0],
+                                               "B": current.shape[1],
+                                               "N": current.shape[2]},
+    candidates=({"ct": 128, "bn": 256}, {"ct": 128, "bn": 512},
+                {"ct": 256, "bn": 256}, {"ct": 512, "bn": 512}),
+    make_inputs=_make_alif_inputs,
+    diff_argnums=(0, 1, 2, 3, 4),
+    tol=1e-4,
+    # current + spikes blocks dominate; v/a scratch + init/final + tau/rho
+    vmem_bytes=lambda dims, b: 4 * (2 * b["ct"] * b["bb"] * b["bn"]
+                                    + 6 * b["bb"] * b["bn"] + 2 * b["bn"]),
+))
+
+
+def _alifrec_vmem_bytes(dims, blocks):
+    n = -(-dims["N"] // 128) * 128
+    ct, bb = blocks["ct"], blocks["bb"]
+    # current + spikes blocks, resident W, and the v/a/s state + init/final
+    return 4 * (2 * ct * bb * n + n * n + 9 * bb * n + 2 * n)
+
+
+registry.register(registry.KernelSpec(
+    name="alifrec",
+    ref=alifrec_scan_ref,
+    pallas=_alifrec_pallas_impl,
+    apply=lambda args, force=False: alifrec_scan(*args, 1.0, 1.8,
+                                                 "rectangle", 1.0, force),
+    block_axes=(registry.BlockAxis("ct", "T", preferred=128, align=8,
+                                   exact=True),
+                registry.BlockAxis("bb", "B", preferred=8, align=8)),
+    dims_of=lambda current, w_rec, tau, rho, v0, a0, s0: {
+        "T": current.shape[0], "B": current.shape[1], "N": current.shape[2]},
+    candidates=({"ct": 64}, {"ct": 128}, {"ct": 256}, {"ct": 128, "bb": 16}),
+    make_inputs=_make_alifrec_inputs,
+    diff_argnums=(0, 1, 2, 3, 4, 5, 6),
+    tol=1e-4,
+    vmem_bytes=_alifrec_vmem_bytes,
+))

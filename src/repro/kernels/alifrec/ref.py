@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the fused adaptive-threshold LIF time scans.
+
+ALIF (Yin et al. 2021, the paper's ECG SRNN hidden layer) extends LIF with
+a spike-driven adaptation trace that raises the effective threshold:
+
+    u_t  = tau * v_{t-1} + c_t  [+ s_{t-1} @ W_rec]     (DIFF + LOCACC)
+    th_t = v_th + beta * a_{t-1}                        (moving threshold)
+    s_t  = H(u_t - th_t)                                (SEND)
+    v_t  = u_t * (1 - s_t)                              (hard reset)
+    a_t  = rho * a_{t-1} + s_t                          (DIFF on spikes)
+
+Two entry points: `alif_scan_ref` (feed-forward, the `alif` family) and
+`alifrec_scan_ref` (self-recurrent, the `alifrec` family). The plan
+compiler reaches these through the structural pattern matcher — any
+NeuronProgram shaped {membrane + spike-driven adaptation + affine
+threshold + hard reset} lowers here, not just the built-in ALIF.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _scan(current: jax.Array, w_rec: Optional[jax.Array], tau: jax.Array,
+          rho: jax.Array, v0: jax.Array, a0: jax.Array,
+          s0: Optional[jax.Array], v_th: float, beta: float):
+    dt = current.dtype
+    tau32 = tau.astype(jnp.float32)
+    rho32 = rho.astype(jnp.float32)
+    w32 = None if w_rec is None else w_rec.astype(jnp.float32)
+
+    def body(carry, c_t):
+        v, a, s = carry
+        u = tau32 * v + c_t.astype(jnp.float32)
+        if w32 is not None:
+            u = u + s @ w32
+        spk = (u >= v_th + beta * a).astype(jnp.float32)
+        v = u * (1.0 - spk)
+        a = rho32 * a + spk
+        return (v, a, spk), spk.astype(dt)
+
+    s_init = (jnp.zeros_like(v0, jnp.float32) if s0 is None
+              else s0.astype(jnp.float32))
+    (vT, aT, _), spikes = jax.lax.scan(
+        body, (v0.astype(jnp.float32), a0.astype(jnp.float32), s_init),
+        current)
+    return spikes, vT.astype(dt), aT.astype(dt)
+
+
+def alif_scan_ref(current: jax.Array, tau: jax.Array, rho: jax.Array,
+                  v0: jax.Array, a0: jax.Array, v_th: float = 1.0,
+                  beta: float = 1.8):
+    """current: (T, B, N); tau, rho: (N,); v0, a0: (B, N).
+
+    Returns (spikes (T, B, N), v_final (B, N), a_final (B, N)). fp32 state.
+    """
+    return _scan(current, None, tau, rho, v0, a0, None, v_th, beta)
+
+
+def alifrec_scan_ref(current: jax.Array, w_rec: jax.Array, tau: jax.Array,
+                     rho: jax.Array, v0: jax.Array, a0: jax.Array,
+                     s0: jax.Array, v_th: float = 1.0, beta: float = 1.8):
+    """current: (T, B, N); w_rec: (N, N); tau, rho: (N,); v0/a0/s0: (B, N).
+
+    Returns (spikes (T, B, N), v_final (B, N), a_final (B, N)). fp32 state.
+    """
+    return _scan(current, w_rec, tau, rho, v0, a0, s0, v_th, beta)

@@ -177,6 +177,7 @@ _KERNEL_MODULES = (
     "repro.kernels.linrec.ops",
     "repro.kernels.lif.ops",
     "repro.kernels.lifrec.ops",
+    "repro.kernels.alifrec.ops",
     "repro.kernels.spikemm.ops",
     "repro.kernels.attention.ops",
     "repro.kernels.stdp.ops",

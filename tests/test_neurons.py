@@ -1,11 +1,16 @@
-"""Neuron-DSL dynamics tests: closed-form checks + programmability."""
+"""Neuron-DSL dynamics tests: closed-form checks + programmability, plus
+parity between the generic NeuronProgram interpreter and the legacy
+closed-form updates each built-in used to hard-code."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.neuron import ALIF, DHLIF, LI, LIF, PLIF, diff, locacc, make_neuron
+from repro.core.neuron import (ALIF, DHLIF, LI, LIF, PLIF, Decay,
+                               NeuronProgram, ProgramNeuron, StateVar,
+                               Threshold, diff, locacc, make_neuron,
+                               register_neuron, validate_program)
 from repro.core.surrogate import spike, surrogate_names
 
 
@@ -92,3 +97,181 @@ def test_locacc_is_matmul():
     s = jnp.array([[1.0, 0.0, 1.0]])
     w = jnp.arange(12.0).reshape(3, 4)
     np.testing.assert_allclose(locacc(s, w), (w[0] + w[2])[None])
+
+
+# ---------------------------------------------------------------------------
+# the neuron-program IR: interpreter parity vs the legacy closed forms
+# ---------------------------------------------------------------------------
+
+
+def _legacy_fire(neuron, state, current, params):
+    """The closed-form updates each dataclass used to hard-code before the
+    FIRE stage became a declarative NeuronProgram — kept here as the
+    numerical oracle for the generic interpreter."""
+    dt = current.dtype
+    if isinstance(neuron, LIF):
+        v = diff(state["v"], jnp.asarray(neuron.tau, dt), current)
+        s = spike(v - neuron.v_th, neuron.surrogate, neuron.alpha)
+        return {"v": v * (1.0 - s)}, s
+    if isinstance(neuron, PLIF):
+        tau = jax.nn.sigmoid(params["w_tau"]).astype(dt)
+        v = diff(state["v"], tau, current)
+        s = spike(v - neuron.v_th, neuron.surrogate, neuron.alpha)
+        return {"v": v * (1.0 - s)}, s
+    if isinstance(neuron, ALIF):
+        if params:
+            tau = jax.nn.sigmoid(params["w_tau"]).astype(dt)
+            rho = jax.nn.sigmoid(params["w_rho"]).astype(dt)
+        else:
+            tau = jnp.asarray(neuron.tau, dt)
+            rho = jnp.asarray(neuron.rho, dt)
+        v = diff(state["v"], tau, current)
+        th = neuron.v_th + neuron.beta * state["a"]
+        s = spike(v - th, neuron.surrogate, neuron.alpha)
+        return {"v": v * (1.0 - s), "a": diff(state["a"], rho, s)}, s
+    if isinstance(neuron, DHLIF):
+        tau_d = jax.nn.sigmoid(params["w_tau_d"]).astype(dt)
+        tau_s = jax.nn.sigmoid(params["w_tau_s"]).astype(dt)
+        d = diff(state["d"], tau_d, current)
+        v = diff(state["v"], tau_s, jnp.sum(d, axis=-2))
+        s = spike(v - neuron.v_th, neuron.surrogate, neuron.alpha)
+        return {"v": v * (1.0 - s), "d": d}, s
+    if isinstance(neuron, LI):
+        v = diff(state["v"], jnp.asarray(neuron.tau, dt), current)
+        return {"v": v}, v
+    raise TypeError(neuron)
+
+
+_BUILTINS = ["lif", "plif", "alif", "alif_plain", "dhlif", "li"]
+
+
+def _builtin_case(name, key):
+    n = 6
+    if name == "lif":
+        neuron, params = LIF(tau=0.8, v_th=0.6), None
+    elif name == "plif":
+        neuron = PLIF(v_th=0.7)
+        params = neuron.param_init(key, (n,))
+    elif name == "alif":
+        neuron = ALIF(surrogate="sigmoid", alpha=4.0, beta=0.5, v_th=0.8)
+        params = neuron.param_init(key, (n,))
+    elif name == "alif_plain":
+        neuron, params = ALIF(beta=0.5, v_th=0.8), None
+    elif name == "dhlif":
+        neuron = DHLIF(n_branches=3, v_th=0.9)
+        params = neuron.param_init(key, (n,))
+    else:
+        neuron, params = LI(tau=0.9), None
+    cur_shape = (2, 3, n) if name == "dhlif" else (2, n)
+    return neuron, params, cur_shape
+
+
+@pytest.mark.parametrize("name", _BUILTINS)
+def test_program_fire_matches_legacy_closed_form(name):
+    """Forward AND gradients of the generic program interpreter equal the
+    hand-written updates, for several steps of held state."""
+    key = jax.random.PRNGKey(3)
+    neuron, params, cur_shape = _builtin_case(name, key)
+    currents = 0.9 * jax.random.normal(jax.random.fold_in(key, 1),
+                                       (4,) + cur_shape)
+
+    def rollout(fire_fn, params, currents):
+        st = neuron.init_state((2, cur_shape[-1]))
+        outs = []
+        for t in range(currents.shape[0]):
+            st, o = fire_fn(neuron, st, currents[t], params) \
+                if fire_fn is _legacy_fire else fire_fn(st, currents[t],
+                                                        params)
+            outs.append(o)
+        return st, jnp.stack(outs)
+
+    st1, o1 = rollout(_legacy_fire, params, currents)
+    st2, o2 = rollout(neuron.fire, params, currents)
+    assert set(st1) == set(st2)
+    np.testing.assert_allclose(o1, o2, atol=1e-6, rtol=1e-6)
+    for k in st1:
+        np.testing.assert_allclose(st1[k], st2[k], atol=1e-6, rtol=1e-6)
+
+    def make_loss(fire_fn):
+        def loss(args):
+            p, c = args
+            _, o = rollout(fire_fn, p, c)
+            return jnp.sum(jnp.sin(o * 1.3))
+        return loss
+
+    g1 = jax.grad(make_loss(_legacy_fire))((params, currents))
+    g2 = jax.grad(make_loss(neuron.fire))((params, currents))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-5,
+                                                         rtol=1e-5), g1, g2)
+
+
+def test_builtin_programs_validate():
+    for name in ("lif", "plif", "alif", "dhlif", "li"):
+        validate_program(make_neuron(name).program)
+
+
+def test_program_validation_rejects_malformed():
+    v = StateVar("v", Decay("const", 0.9))
+    bad = [
+        NeuronProgram(states=(), threshold=Threshold()),
+        NeuronProgram(states=(v, v), threshold=Threshold()),
+        NeuronProgram(states=(v,), threshold=Threshold(on="ghost")),
+        NeuronProgram(states=(v,), threshold=Threshold(adapt="ghost")),
+        NeuronProgram(states=(v,), threshold=Threshold(), reset="subtract"),
+        NeuronProgram(states=(v,), threshold=Threshold(), output="ghost"),
+        NeuronProgram(states=(v,), threshold=None),   # spikes w/o threshold
+        NeuronProgram(states=(StateVar("a", Decay("const", 0.9),
+                                       drive="spikes"),), threshold=None,
+                      output="a"),
+        NeuronProgram(states=(StateVar("v", Decay("learned", 0.9)),),
+                      threshold=Threshold()),         # learned w/o param
+        NeuronProgram(states=(StateVar("v", Decay("per_branch", 0.9,
+                                                  "w_k")),),
+                      threshold=Threshold()),         # per_branch, no branch
+        NeuronProgram(states=(StateVar("v", Decay("const", 0.9),
+                                       drive="sum:v"),),
+                      threshold=Threshold()),         # sums non-branch
+        NeuronProgram(states=(StateVar("d", Decay("const", 0.9),
+                                       branch=True),
+                              StateVar("v", Decay("const", 0.9),
+                                       drive="sum:d")),
+                      threshold=Threshold(on="v", adapt="d", scale=0.3),
+                      n_branches=2),                  # adapts on branch state
+        NeuronProgram(states=(StateVar("d", Decay("const", 0.9),
+                                       branch=True),
+                              StateVar("v", Decay("const", 0.9),
+                                       drive="sum:d")),
+                      threshold=Threshold(on="v"), output="d",
+                      n_branches=2),                  # branch-state output
+    ]
+    for prog in bad:
+        with pytest.raises(ValueError):
+            ProgramNeuron(prog=prog)
+
+
+def test_register_neuron_opens_registry_and_rejects_duplicates():
+    def izh_like(**kw):
+        return ProgramNeuron(prog=NeuronProgram(
+            states=(StateVar("v", Decay("const", 0.8)),
+                    StateVar("u", Decay("const", 0.95), drive="spikes")),
+            threshold=Threshold(base=1.0, on="v", adapt="u", scale=0.3)),
+            **kw)
+
+    name = "custom_adaptive_test"
+    register_neuron(name, izh_like)
+    try:
+        n = make_neuron(name, alpha=2.0)
+        assert n.alpha == 2.0
+        st = n.init_state((2, 4))
+        st, s = n.fire(st, jnp.ones((2, 4)))
+        assert s.shape == (2, 4) and set(st) == {"v", "u"}
+        with pytest.raises(ValueError):
+            register_neuron(name, izh_like)
+        register_neuron(name, izh_like, override=True)   # explicit wins
+        with pytest.raises(ValueError):
+            register_neuron("lif", izh_like)             # builtins guarded
+    finally:
+        from repro.core.neuron import NEURON_REGISTRY
+        NEURON_REGISTRY.pop(name, None)
+    with pytest.raises(KeyError):
+        make_neuron("no_such_neuron")

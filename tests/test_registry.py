@@ -21,8 +21,8 @@ ALL_KERNELS = registry.names()
 
 
 def test_all_families_registered():
-    assert set(ALL_KERNELS) == {"linrec", "lif", "lifrec", "spikemm",
-                                "attention", "stdp"}
+    assert set(ALL_KERNELS) == {"linrec", "lif", "lifrec", "alif", "alifrec",
+                                "spikemm", "attention", "stdp"}
     for name in ALL_KERNELS:
         spec = registry.get(name)
         assert spec.make_inputs is not None, name
