@@ -1,0 +1,134 @@
+"""On-chip learning benchmark: per-step vs plan-lowered SynapsePrograms.
+
+Every built-in learning rule is a declarative `SynapseProgram`
+(core/plasticity.py); the plan compiler lowers matching rules to the
+fused `stdp_seq` family — trace DIFFs hoisted through all-T `linrec`, all
+T outer-product updates applied with the weight tile VMEM-resident — while
+the per-step path scans `synapse_step` (T sequential einsum+clip rounds,
+the weight round-tripping memory every step; this is also what the
+hand-rolled stepper loop used to cost). Rows time `plan.run(learn=True)`
+end to end on a plastic 2-layer Program under both lowerings, so the
+ratio is the real training-loop win, forward included; `rule_only` rows
+isolate the learning pass on precomputed spike trains.
+
+Parity (`max_abs_err` on the learned weight) is asserted per row: a
+speedup that changes the trajectory is a bug, not a result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plan, plasticity
+from repro.core.snn_layers import make_plastic_ff
+
+RULES = ("pair_stdp", "triplet_stdp", "reward_stdp")
+
+
+def _force_step(compiled: plan.Plan) -> plan.Plan:
+    return dataclasses.replace(compiled, plastic=tuple(
+        dataclasses.replace(p, lower=plan.SYN_STEP, reason="forced")
+        for p in compiled.plastic))
+
+
+def _time_paired(fns, repeats: int = 9):
+    """Interleaved adjacent-pair timing (see bench_snn_engine)."""
+    for fn in fns:
+        jax.block_until_ready(fn())                  # compile + warm
+    samples = [[] for _ in fns]
+    for _ in range(repeats):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[i].append(time.perf_counter() - t0)
+    ratios = sorted(a / b for a, b in zip(*samples))
+    return [min(s) for s in samples], ratios[len(ratios) // 2]
+
+
+def measure_program(rule_name: str, T=300, B=8, n_in=256, n_hidden=128
+                    ) -> Dict:
+    """Full plastic Program: forward + learning, step vs fused lowering."""
+    rule = plasticity.make_synapse(rule_name)
+    nodes, params = make_plastic_ff(jax.random.PRNGKey(0), n_in=n_in,
+                                    n_hidden=n_hidden, rule=rule)
+    x = (jax.random.uniform(jax.random.PRNGKey(1), (T, B, n_in)) < 0.15
+         ).astype(jnp.float32)
+    mod = (jax.random.uniform(jax.random.PRNGKey(2), (T,))
+           if rule_name == "reward_stdp" else None)
+    compiled = plan.compile_program(nodes)
+    assert compiled.plastic[0].lower == plan.SYN_SEQ, compiled.describe()
+    stepped = _force_step(compiled)
+
+    def w_of(p):
+        st, _, _ = plan.run(nodes, params, x, plan=p, mod=mod)
+        return st["hidden"]["syn:input"]["w"]
+
+    fused = jax.jit(lambda: w_of(compiled))
+    step = jax.jit(lambda: w_of(stepped))
+    err = float(jnp.max(jnp.abs(fused() - step())))
+    (t_step, t_fused), speedup = _time_paired((step, fused))
+    assert err < 1e-4, (rule_name, err)
+    return {
+        "plan": compiled.describe(),
+        "step_ms": 1e3 * t_step,
+        "fused_ms": 1e3 * t_fused,
+        "speedup_x": speedup,
+        "steps_per_s_fused": T / t_fused,
+        "steps_per_s_step": T / t_step,
+        "max_abs_err": err,
+    }
+
+
+def measure_rule_only(rule_name: str, T=300, B=8, M=256, N=128) -> Dict:
+    """Learning pass alone on precomputed trains: synapse_run scan vs the
+    linrec-hoisted stdp_seq lowering."""
+    rule = plasticity.make_synapse(rule_name)
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    pre = (jax.random.uniform(ks[0], (T, B, M)) < 0.15).astype(jnp.float32)
+    post = (jax.random.uniform(ks[1], (T, B, N)) < 0.15).astype(jnp.float32)
+    w = 0.3 * jax.random.normal(ks[2], (M, N), jnp.float32)
+    mod = (jnp.ones((T,)) if rule_name == "reward_stdp" else None)
+    mod_full = plan._mod_full(mod, T, B, N, jnp.float32) if any(
+        "mod" in t.post for t in rule.terms) else None
+    syn0 = plasticity.synapse_init(rule, w, B)
+
+    step = jax.jit(lambda: plasticity.synapse_run(rule, w, pre, post,
+                                                  mod)["w"])
+    fused = jax.jit(lambda: plan._learn_fused(rule, syn0, pre, post,
+                                              mod_full)["w"])
+    err = float(jnp.max(jnp.abs(fused() - step())))
+    (t_step, t_fused), speedup = _time_paired((step, fused))
+    assert err < 1e-4, (rule_name, err)
+    upd_per_s = T * M * N / t_fused                  # synapse-updates/s
+    return {
+        "step_ms": 1e3 * t_step,
+        "fused_ms": 1e3 * t_fused,
+        "speedup_x": speedup,
+        "synapse_updates_per_s": upd_per_s,
+        "max_abs_err": err,
+    }
+
+
+def run() -> Dict:
+    print("=== plasticity: per-step vs plan-lowered SynapsePrograms ===")
+    out: Dict[str, Dict] = {}
+    for name in RULES:
+        m = measure_program(name)
+        out[name] = m
+        print(f"{name:18s} {m['step_ms']:8.2f} ms -> {m['fused_ms']:7.2f} ms "
+              f"({m['speedup_x']:5.2f}x, err {m['max_abs_err']:.1e})")
+        r = measure_rule_only(name)
+        out[f"{name}_rule_only"] = r
+        print(f"{name + '_rule':18s} {r['step_ms']:8.2f} ms -> "
+              f"{r['fused_ms']:7.2f} ms ({r['speedup_x']:5.2f}x, "
+              f"{r['synapse_updates_per_s']:.2e} syn-upd/s)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""On-chip learning in 50 lines: a plastic Connection under plan.run.
+
+A 2-layer LIF network whose input synapses carry a declarative pair-STDP
+`SynapseProgram`. The plan compiler pattern-matches the rule and lowers it
+to the fused `stdp_seq` kernel family, so the weight updates run inside
+the fused engine — no hand-rolled stepper loop. Chunked-online semantics:
+each window's forward uses the entry weights; `apply_learned` merges the
+window's updates before the next chunk, exactly how the chip drains its
+FIRE-stage weight writes.
+
+The input is two alternating spike populations; STDP potentiates the
+synapses of whichever inputs reliably drive their postsynaptic neurons,
+so the learned weight matrix develops visible structure.
+
+Run: PYTHONPATH=src python examples/stdp_online.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plan, plasticity
+from repro.core.snn_layers import make_plastic_ff
+
+key = jax.random.PRNGKey(0)
+n_in, n_hidden, T, B = 32, 16, 200, 4
+
+rule = plasticity.pair_stdp(a_plus=0.02, a_minus=0.015, w_min=-1.0, w_max=1.0)
+nodes, params = make_plastic_ff(key, n_in=n_in, n_hidden=n_hidden, n_out=4,
+                                rule=rule)
+compiled = plan.compile_program(nodes)
+print(f"plan: {compiled.describe()}")
+
+# two alternating input assemblies: first half vs second half of the inputs
+def make_chunk(k, phase):
+    rate = jnp.where((jnp.arange(n_in) < n_in // 2) ^ (phase % 2 == 1),
+                     0.30, 0.02)
+    return (jax.random.uniform(k, (T, B, n_in)) < rate).astype(jnp.float32)
+
+w0 = params["hidden"]["w_input"]
+for chunk in range(6):
+    x = make_chunk(jax.random.fold_in(key, chunk), chunk)
+    state, _, _ = plan.run(nodes, params, x, plan=compiled)
+    params = plasticity.apply_learned(nodes, params, state)  # next chunk sees it
+    dw = float(jnp.linalg.norm(params["hidden"]["w_input"] - w0))
+    rate = float(jnp.mean(state["hidden"]["out"]))
+    print(f"chunk {chunk}: |w - w0| = {dw:6.3f}, hidden rate {rate:.2%}")
+
+w = params["hidden"]["w_input"]
+print(f"learned weight range: [{float(w.min()):+.2f}, {float(w.max()):+.2f}] "
+      f"(started at |w| <= {float(jnp.abs(w0).max()):.2f})")

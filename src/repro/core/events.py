@@ -7,16 +7,26 @@ by a FIRE phase (membrane update, spike emission, and — for on-chip learning
 step is integrate -> fire; sparsity is exploited at block granularity by the
 `spikemm` kernel instead of at word granularity by the NoC.
 
-The engine runs a `Program`: an ordered list of `LayerNode`s whose
-connections may be feed-forward, recurrent (previous-timestep spikes), or
-skip (delayed delivery, Fig. 8c — implemented as a ring buffer of spike
-tensors, exactly the chip's 'delayed-fire' neuron type).
+The engine runs a `Program`: an ordered list of `LayerNode`s whose inbound
+edges are first-class `Connection` objects — source, delay (skip/delayed
+delivery, Fig. 8c — implemented as a ring buffer of spike tensors, exactly
+the chip's 'delayed-fire' neuron type), the weight-parameter key, and an
+optional `SynapseProgram` (core/plasticity.py) making the edge learnable
+on-chip. The legacy string micro-syntax ("name", "name@d", "self") still
+works everywhere: `Connection.parse` is the thin back-compat adapter, and
+`LayerNode` normalizes mixed string/Connection input tuples at
+construction.
+
+The stepper itself is forward-only; plasticity executes at run granularity
+in `core/plan.py` (fused `stdp_seq` lowering or the per-step fallback over
+the realized spike trains — identical trajectories), with synapse state
+carried here in `state[node]["syn:<conn>"]`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -26,29 +36,107 @@ from repro.core.neuron import NeuronSpec
 Array = jax.Array
 
 
+def _parse_src(src: str) -> Tuple[str, int]:
+    if "@" in src:
+        name, d = src.split("@")
+        return name, int(d)
+    return src, 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Connection:
+    """One inbound edge of a LayerNode, first-class.
+
+    src:     source node name; "input" = the external spike tensor;
+             "self" = this node's own output at t-1 (recurrence).
+    delay:   delayed-fire depth in timesteps (ring-buffered delivery).
+    weight:  params key holding this edge's weight; "" = the canonical
+             convention ("w_<src>", "w_self") that `ff_integrate` /
+             `branch_integrate` resolve from the feed key. Overriding it
+             (weight sharing, swapping in a learned tensor) is honored
+             end to end: the plan compiler and the plasticity machinery
+             read `weight_key`, and the stepper aliases the canonical key
+             to the override for the integrate call, so `ff_integrate`
+             picks it up unchanged.
+    plastic: optional `SynapseProgram` (core/plasticity.py); the edge's
+             weight then learns on-chip under `plan.run` and the updated
+             tensor is published in `state[node]["syn:<key>"]["w"]`.
+    """
+
+    src: str
+    delay: int = 0
+    weight: str = ""
+    plastic: Optional["SynapseProgram"] = None  # noqa: F821
+
+    def __post_init__(self):
+        if not self.src:
+            raise ValueError("Connection needs a source name")
+        if self.delay < 0:
+            raise ValueError(f"negative delay {self.delay} on connection "
+                             f"from {self.src!r}")
+        if self.plastic is not None:
+            from repro.core.plasticity import validate_synapse_program
+            validate_synapse_program(self.plastic)
+
+    @property
+    def key(self) -> str:
+        """The feed-dict key — identical to the legacy string spelling, so
+        integrate callables written against the old API see the same dict."""
+        return f"{self.src}@{self.delay}" if self.delay else self.src
+
+    @property
+    def weight_key(self) -> str:
+        if self.weight:
+            return self.weight
+        return "w_self" if self.src == "self" else f"w_{self.src}"
+
+    @classmethod
+    def parse(cls, spec: Union[str, "Connection"]) -> "Connection":
+        """Back-compat adapter: "name" / "name@d" / "self" -> Connection."""
+        if isinstance(spec, cls):
+            return spec
+        name, d = _parse_src(spec)
+        return cls(src=name, delay=d)
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerNode:
     """One population of neurons + its inbound connections.
 
     integrate: (params, inputs: dict[str, Array]) -> current  (INTEG stage)
     neuron:    NeuronSpec                                      (FIRE stage)
-    inputs:    names of source nodes ("input" = external spikes); a name
-               suffixed with "@d" is a skip connection delayed by d steps;
-               "self" = recurrent (previous timestep of this node).
+    inputs:    inbound edges — `Connection` objects or legacy strings
+               ("input" = external spikes, "name@d" = skip connection
+               delayed by d steps, "self" = previous timestep of this
+               node); mixed tuples are fine. Normalized at construction:
+               `.connections` holds the Connection view, `.inputs` the
+               equivalent feed keys.
     """
 
     name: str
     neuron: NeuronSpec
     integrate: Callable[[Dict[str, Any], Dict[str, Array]], Array]
-    inputs: Tuple[str, ...] = ("input",)
+    inputs: Tuple[Union[str, Connection], ...] = ("input",)
     out_dim: int = 0
+    connections: Tuple[Connection, ...] = dataclasses.field(init=False)
 
-
-def _parse_src(src: str) -> Tuple[str, int]:
-    if "@" in src:
-        name, d = src.split("@")
-        return name, int(d)
-    return src, 0
+    def __post_init__(self):
+        conns = tuple(Connection.parse(s) for s in self.inputs)
+        keys = [c.key for c in conns]
+        if len(set(keys)) != len(keys):
+            raise ValueError(f"node {self.name!r}: duplicate connection "
+                             f"keys {keys}")
+        canon = {}
+        for c in conns:
+            if c.weight and canon.setdefault(
+                    "w_self" if c.src == "self" else f"w_{c.src}",
+                    c.weight) != c.weight:
+                # the ff convention shares one weight per source, so two
+                # same-source edges cannot alias it to different tensors
+                raise ValueError(f"node {self.name!r}: conflicting weight "
+                                 f"overrides for source {c.src!r}")
+        object.__setattr__(self, "connections", conns)
+        object.__setattr__(self, "inputs", tuple(keys))
 
 
 def state_dtype(dtype) -> jnp.dtype:
@@ -59,23 +147,49 @@ def state_dtype(dtype) -> jnp.dtype:
     return dtype if jnp.issubdtype(dtype, jnp.floating) else jnp.dtype(jnp.float32)
 
 
-def init_state(nodes: List[LayerNode], batch: int, dtype=jnp.float32):
-    """Neuron states + skip-delay ring buffers for every node."""
+def init_state(nodes: List[LayerNode], batch: int, dtype=jnp.float32,
+               params: Optional[Dict[str, Any]] = None):
+    """Neuron states, skip-delay ring buffers, and synapse (plasticity)
+    state for every node. Plastic connections need `params` to seed the
+    learned weight (trace shapes derive from it)."""
     dtype = state_dtype(dtype)
     state = {}
     max_delay: Dict[str, int] = {}
     for n in nodes:
-        for src in n.inputs:
-            name, d = _parse_src(src)
-            if d:
-                max_delay[name] = max(max_delay.get(name, 0), d)
+        for c in n.connections:
+            if c.delay:
+                max_delay[c.src] = max(max_delay.get(c.src, 0), c.delay)
     for n in nodes:
         s = n.neuron.init_state((batch, n.out_dim), dtype)
         s["out"] = jnp.zeros((batch, n.out_dim), dtype)  # last emitted spikes
         if n.name in max_delay:
             s["ring"] = jnp.zeros((max_delay[n.name], batch, n.out_dim), dtype)
+        for c in n.connections:
+            if c.plastic is None:
+                continue
+            if params is None:
+                raise ValueError(
+                    f"node {n.name!r}: connection {c.key!r} is plastic; "
+                    "init_state needs params=... to seed its weight")
+            from repro.core.plasticity import synapse_init
+            w = params[n.name][c.weight_key]
+            s[f"syn:{c.key}"] = synapse_init(c.plastic, w, batch)
         state[n.name] = s
     return state
+
+
+def _node_params(n: LayerNode, params: Dict[str, Any]) -> Dict[str, Any]:
+    """Node params with custom `Connection.weight` keys aliased onto the
+    canonical names, so the built-in integrate conventions (`w_<src>`,
+    `w_self`) transparently pick up overridden/shared weight tensors."""
+    p = params.get(n.name, {})
+    remap = {("w_self" if c.src == "self" else f"w_{c.src}"): c.weight
+             for c in n.connections if c.weight}
+    if remap:
+        p = dict(p)
+        for canon, key in remap.items():
+            p[canon] = p[key]
+    return p
 
 
 def step(nodes: List[LayerNode], params: Dict[str, Any], state: Dict[str, Any],
@@ -83,37 +197,41 @@ def step(nodes: List[LayerNode], params: Dict[str, Any], state: Dict[str, Any],
          ) -> Tuple[Dict[str, Any], Array]:
     """One INTEG+FIRE timestep through all nodes (in order).
 
-    `ext` maps raw input specifiers (e.g. "conv1", "conv1@2") to externally
-    supplied per-timestep feeds — the plan compiler (`core/plan.py`) uses it
-    to run a fallback *segment* of a Program whose remaining nodes were
-    fused out of the time loop (their full-time outputs, delay-shifted as
-    needed, arrive here one slice per step).
+    `ext` maps feed keys (e.g. "conv1", "conv1@2") to externally supplied
+    per-timestep feeds — the plan compiler (`core/plan.py`) uses it to run
+    a fallback *segment* of a Program whose remaining nodes were fused out
+    of the time loop (their full-time outputs, delay-shifted as needed,
+    arrive here one slice per step). Synapse state rides through untouched
+    (plasticity is a run-granularity pass, not a stepper concern).
     """
     new_state = dict(state)
     emitted: Dict[str, Array] = {"input": x_t}
     for n in nodes:
         feeds = {}
-        for src in n.inputs:
-            name, d = _parse_src(src)
-            if name == "self":
-                feeds[src] = state[n.name]["out"]          # recurrent: t-1
-            elif ext is not None and src in ext:
-                feeds[src] = ext[src]                      # plan-fused source
-            elif d:
-                feeds[src] = state[name]["ring"][d - 1]    # delayed-fire
-            elif name in emitted:
-                feeds[src] = emitted[name]                 # same-timestep FF
+        for c in n.connections:
+            if c.src == "self":
+                feeds[c.key] = state[n.name]["out"]        # recurrent: t-1
+            elif ext is not None and c.key in ext:
+                feeds[c.key] = ext[c.key]                  # plan-fused source
+            elif c.delay:
+                feeds[c.key] = state[c.src]["ring"][c.delay - 1]  # delayed
+            elif c.src in emitted:
+                feeds[c.key] = emitted[c.src]              # same-timestep FF
             else:
-                feeds[src] = state[name]["out"]            # not yet run: t-1
-        current = n.integrate(params.get(n.name, {}), feeds)   # INTEG
+                feeds[c.key] = state[c.src]["out"]         # not yet run: t-1
+        current = n.integrate(_node_params(n, params), feeds)  # INTEG
         ns, s_out = n.neuron.fire(
-            {k: v for k, v in state[n.name].items() if k not in ("out", "ring")},
+            {k: v for k, v in state[n.name].items()
+             if k not in ("out", "ring") and not k.startswith("syn:")},
             current, params.get(n.name, {}).get("neuron"))      # FIRE
         ns = dict(ns)
         ns["out"] = s_out
         if "ring" in state[n.name]:
             ring = state[n.name]["ring"]
             ns["ring"] = jnp.concatenate([s_out[None], ring[:-1]], axis=0)
+        for k, v in state[n.name].items():
+            if k.startswith("syn:"):
+                ns[k] = v
         new_state[n.name] = ns
         emitted[n.name] = s_out
     return new_state, emitted[nodes[-1].name]
@@ -127,7 +245,7 @@ def run(nodes: List[LayerNode], params: Dict[str, Any], x: Array,
     Returns (final_state, outputs (T, batch, n_out), recorded dict).
     """
     if state is None:
-        state = init_state(nodes, x.shape[1], x.dtype)
+        state = init_state(nodes, x.shape[1], x.dtype, params)
 
     def body(st, x_t):
         st, out = step(nodes, params, st, x_t)

@@ -201,7 +201,7 @@ def validate_program(prog: NeuronProgram) -> NeuronProgram:
                                  f"{th.adapt!r}")
             if next(s for s in prog.states if s.name == th.adapt).branch:
                 raise ValueError("threshold cannot adapt on a branch state")
-    if prog.reset not in ("zero", "none"):
+    if prog.reset not in ("zero", "subtract", "none"):
         raise ValueError(f"bad reset {prog.reset!r}")
     if prog.output != "spikes":
         if prog.output not in names:
@@ -249,6 +249,8 @@ def program_fire(prog: NeuronProgram, state: State, current: Array,
     s = spike(vals[th.on] - level, surrogate, alpha)
     if prog.reset == "zero":
         vals[th.on] = vals[th.on] * (1.0 - s)
+    elif prog.reset == "subtract":
+        vals[th.on] = vals[th.on] - level * s
     for sv in prog.states:
         if sv.drive == "spikes":
             vals[sv.name] = diff(vals[sv.name], decay_array(sv.decay, params,
@@ -313,16 +315,19 @@ class ProgramNeuron(NeuronSpec):
 
 @dataclasses.dataclass(frozen=True)
 class LIF(NeuronSpec):
-    """Leaky integrate-and-fire, paper eqs. (1)-(3). Hard reset to zero."""
+    """Leaky integrate-and-fire, paper eqs. (1)-(3). Hard reset to zero by
+    default; `reset="subtract"` keeps the suprathreshold residue
+    (v <- v - v_th on spike), the convention rate-coded converters use."""
 
     tau: float = 0.9
     v_th: float = 1.0
+    reset: str = "zero"
 
     @property
     def program(self) -> NeuronProgram:
         return NeuronProgram(
             states=(StateVar("v", Decay("const", self.tau)),),
-            threshold=Threshold(base=self.v_th))
+            threshold=Threshold(base=self.v_th), reset=self.reset)
 
 
 @dataclasses.dataclass(frozen=True)

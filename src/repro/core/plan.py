@@ -4,9 +4,9 @@ The generic stepper (`events.run`) interprets a Program one timestep at a
 time: every node pays T kernel launches and round-trips its membrane state
 through HBM every step, and the INTEG matmuls run at (B, fan_in) — far too
 skinny to feed the MXU. But most Program structure is static: which node
-feeds which, with what delay, through which neuron dynamics. This module
-analyzes that structure once and emits a plan of *segments*, each executed
-over the whole time axis at once.
+feeds which, with what delay, through which neuron dynamics, learning with
+what rule. This module analyzes that structure once and emits a plan of
+*segments*, each executed over the whole time axis at once.
 
 Since the neuron API became declarative (`core/neuron.py::NeuronProgram`),
 classification is *structural pattern matching on the IR* — there is no
@@ -17,8 +17,10 @@ matches a kernel pattern:
   ------------------------------------------------  -------------------
   1 state, current-driven, no threshold, membrane    `linrec` (associative
   output                                             all-T scan)
-  1 state, current-driven, constant threshold, hard   `lif` (+ `lifrec`
-  reset, spike output                                 when self-recurrent)
+  1 state, current-driven, constant threshold, zero   `lif` (+ `lifrec`
+  or subtract reset, spike output                     when self-recurrent;
+                                                      subtract reset is
+                                                      feed-forward only)
   2 states {membrane + spike-driven adaptation},      `alif` (+ `alifrec`
   affine threshold in the adaptation, hard reset      when self-recurrent)
   2 states {branch dendrites + sum-driven soma},      branch-integrate
@@ -26,18 +28,32 @@ matches a kernel pattern:
                                                       over the branch axis)
                                                       feeding `lif`
 
+Synapse programs (`core/plasticity.py::SynapseProgram`, attached to a
+`Connection(plastic=...)`) are matched the same way: any rule whose trace
+decays are constants lowers to the generalized `stdp_seq` kernel family —
+trace DIFFs hoisted through all-T `linrec`, then every outer-product
+update term applied over the window with the weight tile VMEM-resident —
+while unmatched rules (learned decays, oversized programs) run through the
+parity-checked per-step fallback (`plasticity.synapse_step` scanned over
+the realized spike trains). Either way, on-chip learning runs *inside*
+`plan.run` (and, forced to `REPRO_SNN_ENGINE=stepper`, as the same pass
+after the interpreted forward): within one run window the forward uses the
+entry weights, and the learned weight + final traces are published in
+`state[node]["syn:<conn>"]` (chunked-online semantics; merge with
+`plasticity.apply_learned` between windows).
+
 INTEG is hoisted out of the time loop for every fused segment: one
 registry-dispatched `spikemm` over the (T*B, fan_in) spike matrix per feed
 (block-occupancy flags = the FINDIDX bitmap at MXU granularity); the
 branch convention (`snn_layers.branch_integrate`) hoists as one spikemm
 against the branch-flattened weight tensor. Everything that matches no
-pattern (extra states, soft resets, untagged integrates, recurrent branch
-programs) runs through the stepper — per segment, with the fused
-neighbours' full-time outputs (delay-shifted as needed) fed in externally.
+pattern (extra states, untagged integrates, recurrent branch programs)
+runs through the stepper — per segment, with the fused neighbours'
+full-time outputs (delay-shifted as needed) fed in externally.
 
-Delayed ("src@d") reads of a *fused* source are exact: the ring buffer the
-stepper would maintain is just a time-shift of the source's full output
-tensor, seeded from the initial ring state.
+Delayed (`Connection(delay=d)` / "src@d") reads of a *fused* source are
+exact: the ring buffer the stepper would maintain is just a time-shift of
+the source's full output tensor, seeded from the initial ring state.
 
 Capability checks keep the compiler conservative: a Program where any node
 reads a *later* node (previous-timestep semantics) compiles to a single
@@ -59,13 +75,14 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import events
+from repro.core import events, plasticity
 from repro.core.neuron import Decay, NeuronProgram
 from repro.kernels.alifrec.ops import alif_scan, alifrec_scan
 from repro.kernels.lif.ops import lif_scan
 from repro.kernels.lifrec.ops import lifrec_scan
 from repro.kernels.linrec.ops import linrec
 from repro.kernels.spikemm.ops import spikemm
+from repro.kernels.stdp.ops import stdp_seq
 
 Array = jax.Array
 
@@ -78,6 +95,10 @@ LOWER_LI = "li"
 LOWER_LIF = "lif"
 LOWER_ALIF = "alif"
 LOWER_DHLIF = "dhlif"
+
+# synapse-program lowerings
+SYN_SEQ = "stdp_seq"
+SYN_STEP = "step"
 
 
 def engine_mode() -> str:
@@ -99,8 +120,19 @@ class Segment:
 
 
 @dataclasses.dataclass(frozen=True)
+class PlasticLower:
+    """Lowering decision for one plastic Connection (run-granularity pass)."""
+
+    node: str                  # destination node name
+    conn: str                  # Connection.key
+    lower: str                 # stdp_seq | step
+    reason: str = ""           # why the fused family was refused
+
+
+@dataclasses.dataclass(frozen=True)
 class Plan:
     segments: Tuple[Segment, ...]
+    plastic: Tuple[PlasticLower, ...] = ()
 
     @property
     def fully_fallback(self) -> bool:
@@ -115,14 +147,24 @@ class Plan:
             if s.reason:
                 tag += f"({s.reason})"
             parts.append(tag)
-        return " -> ".join(parts)
+        out = " -> ".join(parts)
+        if self.plastic:
+            learns = []
+            for p in self.plastic:
+                tag = f"{p.node}.{p.conn}:{p.lower}"
+                if p.reason:
+                    tag += f"({p.reason})"
+                learns.append(tag)
+            out += " | learn " + ",".join(learns)
+        return out
 
 
 def _hoist_tag(node: events.LayerNode) -> Optional[str]:
-    """INTEG hoist convention: "ff" = per-feed `s @ w_<src>` matmuls
-    (`snn_layers.ff_integrate`), "branch" = the single-feed dendritic
-    einsum (`snn_layers.branch_integrate`). Custom integrates opt in by
-    setting `.hoist`; untagged integrates keep the stepper."""
+    """INTEG hoist convention: "ff" = per-feed `s @ w` matmuls against each
+    connection's weight key (`snn_layers.ff_integrate` = the canonical
+    "w_<src>" naming), "branch" = the single-feed dendritic einsum
+    (`snn_layers.branch_integrate`, fixed key "w_input"). Custom integrates
+    opt in by setting `.hoist`; untagged integrates keep the stepper."""
     return getattr(node.integrate, "hoist", None)
 
 
@@ -131,8 +173,8 @@ def _match_fire_pattern(prog: NeuronProgram) -> Tuple[Optional[str], str]:
 
     Returns (lowering family, "") on a match, else (None, reason). Driven
     ONLY by program structure — any user program with a matching shape
-    (<= 2 coupled linear states + threshold + hard reset, or a pure leaky
-    integrator) fuses, whatever Python class built it.
+    (<= 2 coupled linear states + threshold + zero/subtract reset, or a
+    pure leaky integrator) fuses, whatever Python class built it.
     """
     th = prog.threshold
     if not prog.states:
@@ -145,7 +187,7 @@ def _match_fire_pattern(prog: NeuronProgram) -> Tuple[Optional[str], str]:
         return None, "unfusable non-spiking program"
     if prog.output != "spikes":
         return None, "state readout on a spiking program"
-    if prog.reset != "zero":
+    if prog.reset not in ("zero", "subtract"):
         return None, f"reset={prog.reset}"
     mem = next((s for s in prog.states if s.name == th.on), None)
     if mem is None or mem.branch:
@@ -153,6 +195,9 @@ def _match_fire_pattern(prog: NeuronProgram) -> Tuple[Optional[str], str]:
     others = [s for s in prog.states if s.name != th.on]
     if mem.drive == "current" and not others and not th.adapt:
         return LOWER_LIF, ""
+    if prog.reset != "zero":
+        # the alif/dhlif kernels implement the hard reset only
+        return None, "subtract reset on a multi-state program"
     if (mem.drive == "current" and len(others) == 1
             and others[0].drive == "spikes" and not others[0].branch
             and th.adapt == others[0].name):
@@ -169,6 +214,25 @@ def _match_fire_pattern(prog: NeuronProgram) -> Tuple[Optional[str], str]:
     return None, "program shape matches no fused FIRE kernel"
 
 
+def _match_synapse_pattern(prog: "plasticity.SynapseProgram"
+                           ) -> Tuple[str, str]:
+    """Structurally match a SynapseProgram against the `stdp_seq` family.
+
+    -> (SYN_SEQ, "") when every trace decay is a constant (the trace DIFFs
+    then hoist through `linrec` and the update terms run in one
+    VMEM-resident window over the weight tile) and the program is small
+    enough for the fused plane stack; else (SYN_STEP, reason) — the
+    per-step interpreter over the realized spike trains, always correct.
+    """
+    if any(t.decay.kind != "const" for t in prog.traces):
+        return SYN_STEP, "learned trace decay"
+    if len(prog.traces) > 4:
+        return SYN_STEP, f"{len(prog.traces)} traces"
+    if len(prog.terms) > 4:
+        return SYN_STEP, f"{len(prog.terms)} update terms"
+    return SYN_SEQ, ""
+
+
 def _classify(node: events.LayerNode, order: Dict[str, int]
               ) -> Tuple[str, str, str]:
     """-> (segment kind, fallback reason, lowering family)."""
@@ -176,13 +240,12 @@ def _classify(node: events.LayerNode, order: Dict[str, int]
     if hoist not in ("ff", "branch"):
         return FALLBACK, "integrate not hoistable", ""
     n_self = 0
-    for src in node.inputs:
-        name, d = events._parse_src(src)
-        if name == "self":
-            if d:
+    for c in node.connections:
+        if c.src == "self":
+            if c.delay:
                 return FALLBACK, "delayed self", ""
             n_self += 1
-        elif name != "input" and order[name] >= order[node.name]:
+        elif c.src != "input" and order[c.src] >= order[node.name]:
             # previous-timestep read of a later node: handled by caller
             # (whole-program fallback); unreachable here, kept for safety
             return FALLBACK, "back reference", ""
@@ -201,13 +264,14 @@ def _classify(node: events.LayerNode, order: Dict[str, int]
                           f"{'branch' if needs_branch else 'ff'} integrate, "
                           f"got {hoist}"), ""
     if hoist == "branch":
-        n_feeds = sum(1 for src in node.inputs
-                      if events._parse_src(src)[0] != "self")
+        n_feeds = sum(1 for c in node.connections if c.src != "self")
         if n_feeds != 1:
             # the branch convention hoists exactly one feed through w_input;
             # extra feeds would be silently dropped
             return FALLBACK, f"branch integrate with {n_feeds} feeds", ""
     if n_self:
+        if family == LOWER_LIF and prog.reset != "zero":
+            return FALLBACK, "recurrent subtract reset", ""
         if family in (LOWER_LIF, LOWER_ALIF):
             return FUSED_REC, "", family
         return FALLBACK, f"recurrent {family}", ""
@@ -215,17 +279,25 @@ def _classify(node: events.LayerNode, order: Dict[str, int]
 
 
 def compile_program(nodes: List[events.LayerNode]) -> Plan:
-    """Analyze the node DAG and emit the segment schedule."""
+    """Analyze the node DAG and emit the segment + plastic-lowering plan."""
     order = {n.name: i for i, n in enumerate(nodes)}
+    plastic: List[PlasticLower] = []
+    for n in nodes:
+        for c in n.connections:
+            if c.plastic is None:
+                continue
+            lower, why = _match_synapse_pattern(c.plastic)
+            plastic.append(PlasticLower(n.name, c.key, lower, why))
+
     # Any previous-timestep read of a later node couples the whole Program
     # per-timestep: compile to one stepper segment (exactly events.run).
     plan = None
     for n in nodes:
-        for src in n.inputs:
-            name, _ = events._parse_src(src)
-            if name not in ("input", "self") and order[name] >= order[n.name]:
+        for c in n.connections:
+            if c.src not in ("input", "self") and order[c.src] >= order[n.name]:
                 plan = Plan((Segment(FALLBACK, tuple(x.name for x in nodes),
-                                     f"{n.name} reads later node {name}"),))
+                                     f"{n.name} reads later node {c.src}"),),
+                            tuple(plastic))
                 break
         if plan:
             break
@@ -252,7 +324,7 @@ def compile_program(nodes: List[events.LayerNode]) -> Plan:
                 flush()
                 segments.append(Segment(kind, (n.name,), lower=family))
         flush()
-        plan = Plan(tuple(segments))
+        plan = Plan(tuple(segments), tuple(plastic))
 
     if os.environ.get("REPRO_SNN_EXPLAIN") == "1":
         print(f"[repro.plan] {plan.describe()}")
@@ -293,17 +365,15 @@ def _advance_ring(ring: Array, out_full: Array) -> Array:
 def _hoisted_current(node: events.LayerNode, params: Dict[str, Any],
                      outs: Dict[str, Array], state: Dict[str, Any],
                      T: int, B: int) -> Array:
-    """All-T INTEG: one event-gated spikemm per inbound feed.
+    """All-T INTEG: one event-gated spikemm per inbound connection.
 
     The "branch" convention hoists the dendritic einsum as a single
     spikemm against the branch-flattened (n_in, K*n_out) weight view,
     yielding a (T, B, K, n_out) per-branch current block.
     """
     if _hoist_tag(node) == "branch":
-        src = next(s for s in node.inputs
-                   if events._parse_src(s)[0] != "self")
-        name, d = events._parse_src(src)
-        s = _feed_full(outs, state, name, d, T)
+        conn = next(c for c in node.connections if c.src != "self")
+        s = _feed_full(outs, state, conn.src, conn.delay, T)
         w = params[node.name]["w_input"]             # (K, n_in, n_out)
         K, n_in, n_out = w.shape
         if not jnp.issubdtype(s.dtype, jnp.floating):
@@ -312,12 +382,11 @@ def _hoisted_current(node: events.LayerNode, params: Dict[str, Any],
         c = spikemm(s.reshape(T * B, -1), w2)
         return c.reshape(T, B, K, n_out)
     cur = None
-    for src in node.inputs:
-        name, d = events._parse_src(src)
-        if name == "self":
+    for conn in node.connections:
+        if conn.src == "self":
             continue
-        s = _feed_full(outs, state, name, d, T)
-        w = params[node.name][f"w_{name}"]
+        s = _feed_full(outs, state, conn.src, conn.delay, T)
+        w = params[node.name][conn.weight_key]
         if not jnp.issubdtype(s.dtype, jnp.floating):
             s = s.astype(w.dtype)                    # int spikes: match locacc
         c = spikemm(s.reshape(T * B, -1), w).reshape(T, B, -1)
@@ -337,6 +406,11 @@ def _decay_vec(decay: Decay, nparams: Optional[Dict[str, Array]], n: int,
     if p is not None:
         return jnp.broadcast_to(jax.nn.sigmoid(p.astype(jnp.float32)), shape)
     return jnp.full(shape, decay.value, jnp.float32)
+
+
+def _self_weight(node: events.LayerNode, params: Dict[str, Any]) -> Array:
+    conn = next(c for c in node.connections if c.src == "self")
+    return params[node.name][conn.weight_key]
 
 
 def _run_fused(node: events.LayerNode, kind: str, lower: str,
@@ -360,11 +434,12 @@ def _run_fused(node: events.LayerNode, kind: str, lower: str,
         tau = _decay_vec(prog.states[0].decay, nparams, N)
         v0 = state[node.name][th.on]
         if kind == FUSED_REC:
-            out, vT = lifrec_scan(cur, params[node.name]["w_self"], tau, v0,
+            out, vT = lifrec_scan(cur, _self_weight(node, params), tau, v0,
                                   state[node.name]["out"], th.base, sur,
                                   alpha)
         else:
-            out, vT = lif_scan(cur, tau, v0, th.base, sur, alpha)
+            out, vT = lif_scan(cur, tau, v0, th.base, sur, alpha, False,
+                               prog.reset)
         ns = {th.on: vT}
     elif lower == LOWER_ALIF:
         mem = next(s for s in prog.states if s.name == th.on)
@@ -373,7 +448,7 @@ def _run_fused(node: events.LayerNode, kind: str, lower: str,
         rho = _decay_vec(ad.decay, nparams, N)
         v0, a0 = state[node.name][mem.name], state[node.name][ad.name]
         if kind == FUSED_REC:
-            out, vT, aT = alifrec_scan(cur, params[node.name]["w_self"], tau,
+            out, vT, aT = alifrec_scan(cur, _self_weight(node, params), tau,
                                        rho, v0, a0, state[node.name]["out"],
                                        th.base, th.scale, sur, alpha)
         else:
@@ -406,6 +481,9 @@ def _run_fused(node: events.LayerNode, kind: str, lower: str,
     ns["out"] = out[-1]
     if "ring" in state[node.name]:
         ns["ring"] = _advance_ring(state[node.name]["ring"], out)
+    for k, v in state[node.name].items():
+        if k.startswith("syn:"):
+            ns[k] = v
     new_state[node.name] = ns
 
 
@@ -418,13 +496,12 @@ def _run_fallback(seg: Segment, nodes_by_name: Dict[str, events.LayerNode],
     sub_state = {name: state[name] for name in seg.names}
     ext: Dict[str, Array] = {}
     for n in seg_nodes:
-        for src in n.inputs:
-            name, d = events._parse_src(src)
-            if name == "self" or name in seg_names or src in ext:
+        for c in n.connections:
+            if c.src == "self" or c.src in seg_names or c.key in ext:
                 continue
-            if name == "input" and d == 0:
+            if c.src == "input" and c.delay == 0:
                 continue                 # events.step already emits x_t
-            ext[src] = _feed_full(outs, state, name, d, T)
+            ext[c.key] = _feed_full(outs, state, c.src, c.delay, T)
 
     def body(st, ts):
         x_t, ext_t = ts
@@ -436,25 +513,178 @@ def _run_fallback(seg: Segment, nodes_by_name: Dict[str, events.LayerNode],
     new_state.update(final_sub)
 
 
+# ---------------------------------------------------------------------------
+# the plasticity pass (run-granularity on-chip learning)
+# ---------------------------------------------------------------------------
+
+
+def _mod_full(mod: Optional[Array], T: int, B: int, N: int, dtype) -> Array:
+    """Broadcast the run-level modulator to the (T, B, N) term plane.
+
+    Accepts None (zeros: no reward, no update), (T,) global reward per
+    step, (T, B) per-trial reward, or (T, B, N) per-neuron teaching
+    signal."""
+    if mod is None:
+        return jnp.zeros((T, B, N), dtype)
+    m = jnp.asarray(mod, dtype)
+    if m.ndim == 1:
+        m = m[:, None, None]
+    elif m.ndim == 2:
+        m = m[..., None]
+    return jnp.broadcast_to(m, (T, B, N))
+
+
+def _learn_fused(prog: "plasticity.SynapseProgram", syn0: Dict[str, Array],
+                 pre_full: Array, post_full: Array,
+                 mod_full: Optional[Array]) -> Dict[str, Array]:
+    """Fused `stdp_seq` lowering of one SynapseProgram window.
+
+    Trace DIFFs are pure linear recurrences -> hoisted through all-T
+    `linrec`; each term's pre/post factor products become (T*B, n) planes
+    ("after" traces read the one-step-shifted trajectory); the stacked
+    planes drive the serial-in-time `stdp_seq` kernel with the weight tile
+    VMEM-resident across the whole window.
+    """
+    T, B = pre_full.shape[:2]
+    by_name = {t.name: t for t in prog.traces}
+    traj: Dict[str, Array] = {}
+    shifted: Dict[str, Array] = {}
+    finals: Dict[str, Array] = {}
+    for tr in prog.traces:
+        s = pre_full if tr.source == "pre" else post_full
+        h0 = syn0[tr.name].astype(s.dtype)
+        a = jnp.full(s.shape, tr.decay.value, s.dtype)
+        y, hT = linrec(a, tr.scale * s, h0)
+        traj[tr.name] = y
+        finals[tr.name] = hT.astype(syn0[tr.name].dtype)
+        shifted[tr.name] = jnp.concatenate([h0[None], y[:-1]], axis=0)
+
+    def plane(factors, spikes):
+        v = None
+        for f in factors:
+            if f == "spikes":
+                x = spikes
+            elif f == "mod":
+                x = mod_full
+            else:
+                x = traj[f] if by_name[f].update == "before" else shifted[f]
+            v = x if v is None else v * x
+        return v
+
+    P = jnp.stack([plane(t.pre, pre_full).reshape(T * B, -1)
+                   for t in prog.terms])
+    Q = jnp.stack([plane(t.post, post_full).reshape(T * B, -1)
+                   for t in prog.terms])
+    w1 = stdp_seq(P, Q, syn0["w"], amps=tuple(t.amp for t in prog.terms),
+                  w_min=prog.w_min, w_max=prog.w_max, batch=B)
+    out = {"w": w1}
+    out.update(finals)
+    return out
+
+
+def _learn_conn(node: events.LayerNode, conn: events.Connection, lower: str,
+                params: Dict[str, Any], outs: Dict[str, Array],
+                state: Dict[str, Any], new_state: Dict[str, Any],
+                T: int, B: int, mod: Optional[Array],
+                order: Dict[str, int]) -> None:
+    """Apply one plastic Connection's learning rule over the run window.
+
+    The pre train is exactly the feed the stepper delivered: delay-shifted
+    for "src@d" reads, and the *previous-step* output for "self" and for
+    undelayed back-references (a source ordered at-or-after the node is
+    read before it runs, i.e. at t-1, seeded from its initial "out"). The
+    post train is the node's emitted output. The whole update is a weight
+    write: stop_gradient keeps it out of STBP autodiff, like an optimizer
+    step.
+    """
+    prog = conn.plastic
+    key = f"syn:{conn.key}"
+    syn0 = state[node.name][key]
+    prev_step = conn.src == "self" or (
+        conn.src != "input" and conn.delay == 0
+        and order[conn.src] >= order[node.name])
+    if prev_step:
+        src_name = node.name if conn.src == "self" else conn.src
+        s_full = outs[src_name]
+        pre = jnp.concatenate([state[src_name]["out"][None], s_full[:-1]], 0)
+    else:
+        pre = _feed_full(outs, state, conn.src, conn.delay, T)
+    post = outs[node.name]
+    fdt = events.state_dtype(post.dtype)
+    pre, post = pre.astype(fdt), post.astype(fdt)
+    uses_mod = any("mod" in t.post for t in prog.terms)
+    mod_f = _mod_full(mod, T, B, post.shape[-1], fdt) if uses_mod else None
+    pre, post, syn0, mod_f = jax.lax.stop_gradient((pre, post, syn0, mod_f))
+    if lower == SYN_SEQ:
+        syn1 = _learn_fused(prog, syn0, pre, post, mod_f)
+    else:
+        sparams = params.get(node.name, {}).get(key)
+        syn1 = plasticity.synapse_run(prog, syn0["w"], pre, post, mod_f,
+                                      sparams, syn=syn0)
+    ns = dict(new_state[node.name])
+    ns[key] = syn1
+    new_state[node.name] = ns
+
+
+def _learn_pass(plan: Plan, nodes: List[events.LayerNode],
+                params: Dict[str, Any], outs: Dict[str, Array],
+                state: Dict[str, Any], new_state: Dict[str, Any],
+                T: int, B: int, mod: Optional[Array]) -> None:
+    nodes_by_name = {n.name: n for n in nodes}
+    order = {n.name: i for i, n in enumerate(nodes)}
+    for p in plan.plastic:
+        node = nodes_by_name[p.node]
+        conn = next(c for c in node.connections if c.key == p.conn)
+        _learn_conn(node, conn, p.lower, params, outs, state, new_state,
+                    T, B, mod, order)
+
+
 def run(nodes: List[events.LayerNode], params: Dict[str, Any], x: Array,
         state: Optional[Dict[str, Any]] = None, record: Tuple[str, ...] = (),
-        plan: Optional[Plan] = None):
+        plan: Optional[Plan] = None, mod: Optional[Array] = None,
+        learn: bool = True):
     """Drop-in replacement for `events.run` through the compiled plan.
 
     x: (T, batch, n_in). Returns (final_state, outputs (T, batch, n_out),
-    recorded dict) — numerically equivalent to the stepper.
+    recorded dict) — numerically equivalent to the stepper. Plastic
+    Connections learn over the window (disable with `learn=False`); `mod`
+    is the optional modulator/reward signal ((T,), (T, B), or (T, B,
+    n_post)) feeding the rules' "mod" factors. Learned weights + final
+    traces come back in `state[node]["syn:<conn>"]`
+    (`plasticity.apply_learned` merges them into params).
     """
-    if engine_mode() == "stepper":
-        return events.run(nodes, params, x, state, record)
+    mode = engine_mode()
     if plan is None:
         plan = compile_program(nodes)
-    if plan.fully_fallback:
-        return events.run(nodes, params, x, state, record)
-
-    T, B = x.shape[0], x.shape[1]
-    if state is None:
-        state = events.init_state(nodes, B, x.dtype)
+    do_learn = learn and bool(plan.plastic)
     nodes_by_name = {n.name: n for n in nodes}
+    T, B = x.shape[0], x.shape[1]
+
+    if mode == "stepper" or plan.fully_fallback:
+        if not do_learn:
+            return events.run(nodes, params, x, state, record)
+        # interpreted forward, then the same learning pass over the
+        # realized spike trains (record what the plastic conns need)
+        if state is None:
+            state = events.init_state(nodes, B, x.dtype, params)
+        needed = set(record)
+        for p in plan.plastic:
+            needed.add(p.node)
+            conn = next(c for c in nodes_by_name[p.node].connections
+                        if c.key == p.conn)
+            if conn.src not in ("input", "self"):
+                needed.add(conn.src)
+        final, out, recs = events.run(nodes, params, x, state, tuple(needed))
+        outs = dict(recs)
+        outs["input"] = x
+        outs[nodes[-1].name] = out
+        new_state = dict(final)
+        _learn_pass(plan, nodes, params, outs, state, new_state,
+                    T, B, mod)
+        return new_state, out, {r: outs[r] for r in record}
+
+    if state is None:
+        state = events.init_state(nodes, B, x.dtype, params)
     outs: Dict[str, Array] = {"input": x}
     new_state = dict(state)
     for seg in plan.segments:
@@ -464,10 +694,14 @@ def run(nodes: List[events.LayerNode], params: Dict[str, Any], x: Array,
         else:
             _run_fused(nodes_by_name[seg.names[0]], seg.kind, seg.lower,
                        params, outs, state, new_state, T, B)
+    if do_learn:
+        _learn_pass(plan, nodes, params, outs, state, new_state,
+                    T, B, mod)
     recs = {r: outs[r] for r in record}
     return new_state, outs[nodes[-1].name], recs
 
 
-__all__ = ["Plan", "Segment", "compile_program", "engine_mode", "run",
-           "FUSED_FF", "FUSED_REC", "FALLBACK", "LOWER_LI", "LOWER_LIF",
-           "LOWER_ALIF", "LOWER_DHLIF"]
+__all__ = ["Plan", "PlasticLower", "Segment", "compile_program",
+           "engine_mode", "run", "FUSED_FF", "FUSED_REC", "FALLBACK",
+           "LOWER_LI", "LOWER_LIF", "LOWER_ALIF", "LOWER_DHLIF",
+           "SYN_SEQ", "SYN_STEP"]

@@ -26,8 +26,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import events
+from repro.core.events import Connection
 from repro.core.neuron import ALIF, DHLIF, LI, LIF, PLIF, locacc
-from repro.core.plasticity import accumulated_spike_fc, fuse_bn1d_fc
+from repro.core.plasticity import (SynapseProgram, accumulated_spike_fc,
+                                   fuse_bn1d_fc)
 from repro.kernels.lif.ops import lif_scan
 
 Array = jax.Array
@@ -90,9 +92,10 @@ def make_srnn_ecg(key, n_in=4, n_hidden=64, n_out=6, heterogeneous=True):
                      if heterogeneous else LIF(surrogate="sigmoid", alpha=4.0))
     nodes = [
         events.LayerNode("hidden", hidden_neuron, ff_integrate,
-                         inputs=("input", "self"), out_dim=n_hidden),
+                         inputs=(Connection("input"), Connection("self")),
+                         out_dim=n_hidden),
         events.LayerNode("readout", LI(tau=0.95), ff_integrate,
-                         inputs=("hidden",), out_dim=n_out),
+                         inputs=(Connection("hidden"),), out_dim=n_out),
     ]
     params = {
         "hidden": {"w_input": _dense_init(k1, n_in, n_hidden)["w"],
@@ -100,6 +103,33 @@ def make_srnn_ecg(key, n_in=4, n_hidden=64, n_out=6, heterogeneous=True):
                    "neuron": (hidden_neuron.param_init(k3, (n_hidden,))
                               if heterogeneous else None)},
         "readout": {"w_hidden": _dense_init(k4, n_hidden, n_out)["w"]},
+    }
+    return nodes, params
+
+
+def make_plastic_ff(key, n_in=64, n_hidden=32, n_out=4,
+                    rule: SynapseProgram = None, tau=0.8, v_th=0.6):
+    """A 2-layer LIF stack whose input connection learns on-chip.
+
+    The hidden layer's input edge carries `rule` (default: pair STDP), so
+    under `plan.run` the weight `w_input` updates over every window — the
+    fused `stdp_seq` lowering when the rule's structure matches, the
+    per-step fallback otherwise. Used by the plasticity bench, the
+    `stdp_online` example, and the synapse-plan tests.
+    """
+    from repro.core.plasticity import pair_stdp
+    rule = rule if rule is not None else pair_stdp()
+    k1, k2 = jax.random.split(key)
+    nodes = [
+        events.LayerNode("hidden", LIF(tau=tau, v_th=v_th), ff_integrate,
+                         inputs=(Connection("input", plastic=rule),),
+                         out_dim=n_hidden),
+        events.LayerNode("readout", LI(tau=0.95), ff_integrate,
+                         inputs=(Connection("hidden"),), out_dim=n_out),
+    ]
+    params = {
+        "hidden": {"w_input": _dense_init(k1, n_in, n_hidden)["w"]},
+        "readout": {"w_hidden": _dense_init(k2, n_hidden, n_out)["w"]},
     }
     return nodes, params
 

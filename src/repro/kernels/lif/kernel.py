@@ -25,7 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _lif_kernel(cur_ref, tau_ref, v0_ref, s_ref, vT_ref, v_scr, *,
-                ct: int, v_th: float):
+                ct: int, v_th: float, reset: str):
     t_idx = pl.program_id(2)
     nt = pl.num_programs(2)
 
@@ -41,7 +41,7 @@ def _lif_kernel(cur_ref, tau_ref, v0_ref, s_ref, vT_ref, v_scr, *,
         v, s_acc = carry
         v = tau * v + cur[t]
         s = (v >= v_th).astype(jnp.float32)
-        v = v * (1.0 - s)
+        v = v - v_th * s if reset == "subtract" else v * (1.0 - s)
         s_acc = jax.lax.dynamic_update_index_in_dim(s_acc, s, t, 0)
         return v, s_acc
 
@@ -56,10 +56,11 @@ def _lif_kernel(cur_ref, tau_ref, v0_ref, s_ref, vT_ref, v_scr, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("ct", "bb", "bn", "v_th", "interpret"))
+                   static_argnames=("ct", "bb", "bn", "v_th", "reset",
+                                    "interpret"))
 def lif_pallas(current: jax.Array, tau: jax.Array, v0: jax.Array, *,
-               v_th: float = 1.0, ct: int = 256, bb: int = 8, bn: int = 512,
-               interpret: bool = False):
+               v_th: float = 1.0, reset: str = "zero", ct: int = 256,
+               bb: int = 8, bn: int = 512, interpret: bool = False):
     """current: (T, B, N); tau: (N,); v0: (B, N). Dims divisible by tiles."""
     T, B, N = current.shape
     assert T % ct == 0 and B % bb == 0 and N % bn == 0
@@ -67,7 +68,7 @@ def lif_pallas(current: jax.Array, tau: jax.Array, v0: jax.Array, *,
     tau2 = tau.reshape(1, N)
 
     return pl.pallas_call(
-        functools.partial(_lif_kernel, ct=ct, v_th=v_th),
+        functools.partial(_lif_kernel, ct=ct, v_th=v_th, reset=reset),
         grid=grid,
         in_specs=[
             pl.BlockSpec((ct, bb, bn), lambda i, j, t: (t, i, j)),  # current

@@ -34,7 +34,8 @@ from repro.kernels.lif.kernel import lif_pallas
 from repro.kernels.lif.ref import lif_scan_ref
 
 
-def _pallas_impl(current, tau, v0, *, blocks, interpret, v_th=1.0):
+def _pallas_impl(current, tau, v0, *, blocks, interpret, v_th=1.0,
+                 reset="zero"):
     T, B, N = current.shape
     ct, bb, bn = blocks["ct"], blocks["bb"], blocks["bn"]
     # 'ct' is an exact-policy axis (see lifrec/ops.py): zero-padded time
@@ -45,47 +46,52 @@ def _pallas_impl(current, tau, v0, *, blocks, interpret, v_th=1.0):
     tau_p, _ = pad_axis(tau, 0, bn, value=1.0)
     v0_p, _ = pad_axis(v0, 0, bb)
     v0_p, _ = pad_axis(v0_p, 1, bn)
-    s, vT = lif_pallas(c_p, tau_p, v0_p, v_th=v_th, ct=ct, bb=bb, bn=bn,
-                       interpret=interpret)
+    s, vT = lif_pallas(c_p, tau_p, v0_p, v_th=v_th, reset=reset, ct=ct,
+                       bb=bb, bn=bn, interpret=interpret)
     return s[:T, :B, :N], vT[:B, :N]
 
 
-def _fwd_impl(current, tau, v0, v_th, force_pallas):
+def _fwd_impl(current, tau, v0, v_th, reset, force_pallas):
     return registry.dispatch("lif", (current, tau, v0),
-                             force_pallas=force_pallas, v_th=v_th)
+                             force_pallas=force_pallas, v_th=v_th,
+                             reset=reset)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def lif_scan(current: jax.Array, tau: jax.Array, v0: jax.Array,
              v_th: float = 1.0, surrogate: str = "rectangle",
-             alpha: float = 1.0, force_pallas: bool = False):
+             alpha: float = 1.0, force_pallas: bool = False,
+             reset: str = "zero"):
     """Fused LIF over time. current: (T,B,N); tau: (N,); v0: (B,N).
 
+    reset: "zero" (hard reset) or "subtract" (v <- v - v_th on spike).
     Returns (spikes (T,B,N), v_final (B,N)). Differentiable via STBP.
     """
-    return _fwd_impl(current, tau, v0, v_th, force_pallas)
+    return _fwd_impl(current, tau, v0, v_th, reset, force_pallas)
 
 
-def _lif_fwd(current, tau, v0, v_th, surrogate, alpha, force_pallas):
-    s, vT = _fwd_impl(current, tau, v0, v_th, force_pallas)
+def _lif_fwd(current, tau, v0, v_th, surrogate, alpha, force_pallas, reset):
+    s, vT = _fwd_impl(current, tau, v0, v_th, reset, force_pallas)
     return (s, vT), (current, tau, v0, s)
 
 
-def _lif_bwd(v_th, surrogate, alpha, force_pallas, res, cts):
+def _lif_bwd(v_th, surrogate, alpha, force_pallas, reset, res, cts):
     current, tau, v0, s = res
     gs, gvT = cts
     g_fn = _SURROGATES[surrogate]
     tau32 = tau.astype(jnp.float32)
     c32 = current.astype(jnp.float32)
     s32 = s.astype(jnp.float32)
+    subtract = reset == "subtract"
 
     # Recompute u_t (pre-reset potential) forward — cheap (one linrec) and
-    # avoids storing it: v_t = u_t (1 - s_t), u_t = tau v_{t-1} + I_t.
-    # v sequence reconstructible from s and u; do one fused scan.
+    # avoids storing it: u_t = tau v_{t-1} + I_t, then v_t = u_t (1 - s_t)
+    # (zero reset) or v_t = u_t - v_th s_t (subtract reset). The v sequence
+    # is reconstructible from s and u; do one fused scan.
     def fwd_body(v, ts):
         i_t, s_t = ts
         u = tau32 * v + i_t
-        v = u * (1.0 - s_t)
+        v = u - v_th * s_t if subtract else u * (1.0 - s_t)
         return v, (u, v)
 
     _, (u, v_seq) = jax.lax.scan(fwd_body, v0.astype(jnp.float32), (c32, s32))
@@ -93,9 +99,15 @@ def _lif_bwd(v_th, surrogate, alpha, force_pallas, res, cts):
 
     surr = g_fn(u - v_th, jnp.asarray(alpha, jnp.float32))
 
+    # Adjoints through the reset (g = surrogate ds/du):
+    #   zero:     v = u (1 - s)      Gu = Gv (1 - s) + (Gs - Gv u) g
+    #   subtract: v = u - v_th s     Gu = Gv (1 - v_th g) + Gs g
     def bwd_body(gv_next, ts):
         gs_t, u_t, s_t, surr_t = ts
-        gu = gv_next * (1.0 - s_t) + (gs_t - gv_next * u_t) * surr_t
+        if subtract:
+            gu = gv_next * (1.0 - v_th * surr_t) + gs_t * surr_t
+        else:
+            gu = gv_next * (1.0 - s_t) + (gs_t - gv_next * u_t) * surr_t
         gv_prev = tau32 * gu
         return gv_prev, gu
 

@@ -7,10 +7,12 @@ import jax.numpy as jnp
 
 
 def lif_scan_ref(current: jax.Array, tau: jax.Array, v0: jax.Array,
-                 v_th: float = 1.0):
+                 v_th: float = 1.0, reset: str = "zero"):
     """current: (T, B, N); tau: (N,) per-neuron decay; v0: (B, N).
 
-    v_t = tau * v_{t-1} + I_t;  s_t = [v_t >= v_th];  v_t <- v_t * (1 - s_t).
+    v_t = tau * v_{t-1} + I_t;  s_t = [v_t >= v_th];  then the reset:
+    "zero"     v_t <- v_t * (1 - s_t)   (hard reset, eq. (3))
+    "subtract" v_t <- v_t - v_th * s_t  (soft reset: keep the residue)
     Returns (spikes (T, B, N), v_final (B, N)). fp32 state.
     """
     dt = current.dtype
@@ -19,7 +21,7 @@ def lif_scan_ref(current: jax.Array, tau: jax.Array, v0: jax.Array,
     def body(v, i_t):
         v = tau32 * v + i_t.astype(jnp.float32)
         s = (v >= v_th).astype(jnp.float32)
-        v = v * (1.0 - s)
+        v = v - v_th * s if reset == "subtract" else v * (1.0 - s)
         return v, s.astype(dt)
 
     vT, spikes = jax.lax.scan(body, v0.astype(jnp.float32), current)

@@ -1,1 +1,1 @@
-from repro.kernels.stdp.ops import stdp_update
+from repro.kernels.stdp.ops import stdp_seq, stdp_update

@@ -1,5 +1,11 @@
-"""Fused STDP weight-update Pallas kernel (the paper's on-chip learning in
+"""Fused STDP weight-update Pallas kernels (the paper's on-chip learning in
 one pass over the weight tile).
+
+Two kernels share the tile layout: `stdp_pallas` applies ONE pair-rule
+step given precomputed traces; `stdp_seq_pallas` is the generalized form
+the plan compiler lowers `SynapseProgram`s to — K signed outer-product
+term planes applied over T serial steps with the weight tile VMEM-resident
+for the whole window (one HBM round-trip per window, not per step).
 
 One STDP step over a batch of B parallel synapse-update events:
 
@@ -39,6 +45,58 @@ def _stdp_kernel(xpre_ref, spost_ref, spre_ref, xpost_ref, w_ref, out_ref, *,
     w = w_ref[...].astype(jnp.float32)
     w = w + a_plus * pot - a_minus * dep
     out_ref[...] = jnp.clip(w, w_min, w_max).astype(out_ref.dtype)
+
+
+def _stdp_seq_kernel(p_ref, q_ref, w_ref, out_ref, *,
+                     amps: tuple, w_min: float, w_max: float,
+                     batch: int, nsteps: int):
+    w = w_ref[...].astype(jnp.float32)            # (bm, bn), VMEM-resident
+
+    def step(t, w):
+        dw = jnp.zeros_like(w)
+        for k, amp in enumerate(amps):            # K static: unrolled
+            p = p_ref[k, pl.ds(t * batch, batch), :].astype(jnp.float32)
+            q = q_ref[k, pl.ds(t * batch, batch), :].astype(jnp.float32)
+            dw = dw + amp * jax.lax.dot_general(
+                p, q, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        return jnp.clip(w + dw, w_min, w_max)
+
+    w = jax.lax.fori_loop(0, nsteps, step, w)
+    out_ref[...] = w.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("amps", "w_min", "w_max",
+                                             "batch", "bm", "bn", "interpret"))
+def stdp_seq_pallas(P: jax.Array, Q: jax.Array, w: jax.Array, *,
+                    amps: tuple, w_min: float, w_max: float, batch: int,
+                    bm: int = 256, bn: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """Generalized multi-step STDP: K term planes over T serial steps.
+
+    P: (K, T*B, M); Q: (K, T*B, N); w: (M, N). The weight tile stays
+    VMEM-resident across ALL T steps — one HBM->VMEM->HBM pass over the
+    weight matrix per *window*, vs per step for the single-step kernel.
+    Both outer products per step are MXU matmuls with the batch as the
+    contraction dim; the clip fuses into the same tile visit.
+    """
+    K, TB, M = P.shape
+    N = Q.shape[2]
+    assert M % bm == 0 and N % bn == 0 and TB % batch == 0, (M, N, TB)
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_stdp_seq_kernel, amps=amps, w_min=w_min,
+                          w_max=w_max, batch=batch, nsteps=TB // batch),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, TB, bm), lambda i, j: (0, 0, i)),   # P
+            pl.BlockSpec((K, TB, bn), lambda i, j: (0, 0, j)),   # Q
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),         # w
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), w.dtype),
+        interpret=interpret,
+    )(P, Q, w)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "a_plus", "a_minus",

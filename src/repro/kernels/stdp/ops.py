@@ -1,8 +1,16 @@
-"""Public STDP-update entry point, dispatched via the kernel registry
-(Pallas on TPU / interpret, einsum reference otherwise). Plugged into
-core/plasticity via `stdp_step(..., use_kernel=True)`. The update is a
-weight write, not a differentiable op, so the spec registers forward-only
-parity (`diff_argnums=()`)."""
+"""Public STDP entry points, dispatched via the kernel registry (Pallas on
+TPU / interpret, einsum reference otherwise).
+
+`stdp_update` — single pair-rule step on precomputed traces; plugged into
+core/plasticity via `stdp_step(..., use_kernel=True)`.
+
+`stdp_seq` — the generalized multi-step family: K signed outer-product
+term planes applied over T serial steps with a per-step clip and the
+weight tile VMEM-resident for the window. This is what the plan compiler
+lowers matching `SynapseProgram`s to (core/plan.py).
+
+Both are weight writes, not differentiable ops, so the specs register
+forward-only parity (`diff_argnums=()`)."""
 
 from __future__ import annotations
 
@@ -11,8 +19,8 @@ import jax.numpy as jnp
 
 from repro.kernels import registry
 from repro.kernels.common import pad_axis
-from repro.kernels.stdp.kernel import stdp_pallas
-from repro.kernels.stdp.ref import stdp_update_ref
+from repro.kernels.stdp.kernel import stdp_pallas, stdp_seq_pallas
+from repro.kernels.stdp.ref import stdp_seq_ref, stdp_update_ref
 
 
 def _pallas_impl(x_pre, s_post, s_pre, x_post, w, *, blocks, interpret,
@@ -52,6 +60,68 @@ def _make_inputs(key):
     s_post = (jax.random.uniform(ks[3], (B, N)) < 0.2).astype(jnp.float32)
     w = 0.5 * jax.random.normal(ks[4], (M, N), jnp.float32)
     return x_pre, s_post, s_pre, x_post, w
+
+
+def _seq_pallas_impl(P, Q, w, *, blocks, interpret,
+                     amps, w_min, w_max, batch):
+    M, N = w.shape
+    bm, bn = blocks["bm"], blocks["bn"]
+    # zero-padded pre/post planes contribute zero dw; the padded weight
+    # fringe only sees the (harmless) clip and is sliced away
+    P_p, _ = pad_axis(P, 2, bm)
+    Q_p, _ = pad_axis(Q, 2, bn)
+    w_p, _ = pad_axis(w, 0, bm)
+    w_p, _ = pad_axis(w_p, 1, bn)
+    out = stdp_seq_pallas(P_p, Q_p, w_p, amps=amps, w_min=w_min, w_max=w_max,
+                          batch=batch, bm=bm, bn=bn, interpret=interpret)
+    return out[:M, :N]
+
+
+def stdp_seq(P: jax.Array, Q: jax.Array, w: jax.Array, *,
+             amps: tuple, w_min: float, w_max: float, batch: int,
+             force_pallas: bool = False) -> jax.Array:
+    """Multi-step STDP window. P: (K, T*B, M); Q: (K, T*B, N); w: (M, N).
+
+    Per step t: w <- clip(w + sum_k amps[k] * P_k_t^T @ Q_k_t, w_min, w_max).
+    `amps` must be a (hashable) tuple of K floats.
+    """
+    return registry.dispatch("stdp_seq", (P, Q, w), force_pallas=force_pallas,
+                             amps=tuple(amps), w_min=w_min, w_max=w_max,
+                             batch=batch)
+
+
+def _make_seq_inputs(key):
+    ks = jax.random.split(key, 3)
+    K, T, B, M, N = 2, 12, 4, 130, 140        # non-multiples exercise padding
+    P = jax.random.uniform(ks[0], (K, T * B, M), jnp.float32)
+    Q = (jax.random.uniform(ks[1], (K, T * B, N)) < 0.2).astype(jnp.float32)
+    w = 0.5 * jax.random.normal(ks[2], (M, N), jnp.float32)
+    return P, Q, w
+
+
+_SEQ_STATIC = dict(amps=(0.01, -0.012), w_min=-1.0, w_max=1.0, batch=4)
+
+
+registry.register(registry.KernelSpec(
+    name="stdp_seq",
+    ref=stdp_seq_ref,
+    pallas=_seq_pallas_impl,
+    apply=lambda args, force=False: stdp_seq(*args, force_pallas=force,
+                                             **_SEQ_STATIC),
+    block_axes=(registry.BlockAxis("bm", "M", preferred=256, align=8),
+                registry.BlockAxis("bn", "N", preferred=256, align=128)),
+    dims_of=lambda P, Q, w: {"K": P.shape[0], "TB": P.shape[1],
+                             "M": w.shape[0], "N": w.shape[1]},
+    candidates=({"bm": 128, "bn": 128}, {"bm": 128, "bn": 256},
+                {"bm": 256, "bn": 128}, {"bm": 512, "bn": 256}),
+    make_inputs=_make_seq_inputs,
+    diff_argnums=(),                          # weight write: forward-only
+    tol=1e-4,
+    # w block in/out + the K (TB, block) term-plane slabs
+    vmem_bytes=lambda dims, b: 4 * (2 * b["bm"] * b["bn"]
+                                    + dims["K"] * dims["TB"]
+                                    * (b["bm"] + b["bn"])),
+))
 
 
 registry.register(registry.KernelSpec(

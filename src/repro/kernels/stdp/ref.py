@@ -1,5 +1,12 @@
-"""Oracle for the fused STDP update — the einsum form of
-core/plasticity.stdp_step's weight half."""
+"""Oracles for the STDP family.
+
+`stdp_update_ref` — one step of the classic pair rule given precomputed
+traces (the einsum form of core/plasticity.stdp_step's weight half).
+
+`stdp_seq_ref` — the generalized multi-step form the plan compiler lowers
+`SynapseProgram`s to: K signed outer-product term planes applied serially
+over T steps with a per-step clip (the clip makes the recurrence
+non-associative, hence the scan)."""
 
 from __future__ import annotations
 
@@ -15,3 +22,21 @@ def stdp_update_ref(x_pre, s_post, s_pre, x_post, w, *,
                                   x_post.astype(jnp.float32))
     return jnp.clip(w.astype(jnp.float32) + dw_pot - dw_dep,
                     w_min, w_max).astype(w.dtype)
+
+
+def stdp_seq_ref(P, Q, w, *, amps, w_min, w_max, batch):
+    """P: (K, T*B, M) pre-side term planes; Q: (K, T*B, N) post-side planes;
+    w: (M, N). Per step t: w <- clip(w + sum_k amps[k] * P_k_t^T @ Q_k_t)."""
+    K, TB, M = P.shape
+    T = TB // batch
+    amps_a = jnp.asarray(amps, jnp.float32)
+    Pt = P.reshape(K, T, batch, M).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Qt = Q.reshape(K, T, batch, -1).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    def body(w, pq):
+        p, q = pq                                  # (K, B, M), (K, B, N)
+        dw = jnp.einsum("k,kbi,kbj->ij", amps_a, p, q)
+        return jnp.clip(w + dw, w_min, w_max), None
+
+    wT, _ = jax.lax.scan(body, w.astype(jnp.float32), (Pt, Qt))
+    return wT.astype(w.dtype)

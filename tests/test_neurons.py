@@ -217,7 +217,7 @@ def test_program_validation_rejects_malformed():
         NeuronProgram(states=(v, v), threshold=Threshold()),
         NeuronProgram(states=(v,), threshold=Threshold(on="ghost")),
         NeuronProgram(states=(v,), threshold=Threshold(adapt="ghost")),
-        NeuronProgram(states=(v,), threshold=Threshold(), reset="subtract"),
+        NeuronProgram(states=(v,), threshold=Threshold(), reset="bogus"),
         NeuronProgram(states=(v,), threshold=Threshold(), output="ghost"),
         NeuronProgram(states=(v,), threshold=None),   # spikes w/o threshold
         NeuronProgram(states=(StateVar("a", Decay("const", 0.9),

@@ -396,6 +396,60 @@ def test_plan_multi_feed_branch_integrate_falls_back():
 
 
 # ---------------------------------------------------------------------------
+# subtract reset: the newest structural pattern
+# ---------------------------------------------------------------------------
+
+
+def test_plan_subtract_reset_fuses_ff_and_matches_stepper():
+    """A feed-forward LIF with reset="subtract" must pattern-lower to the
+    `lif` kernel (no fallback) and agree with the stepper — forward AND
+    STBP gradients (the soft-reset adjoint differs from the hard reset)."""
+    ks = jax.random.split(KEY, 3)
+    nodes = [
+        events.LayerNode("h", LIF(tau=0.85, v_th=0.7, reset="subtract",
+                                  surrogate="sigmoid", alpha=3.0),
+                         ff_integrate, ("input",), 16),
+        events.LayerNode("ro", LI(tau=0.9), ff_integrate, ("h",), 4),
+    ]
+    p = plan.compile_program(nodes)
+    assert p.segments[0] == plan.Segment(plan.FUSED_FF, ("h",),
+                                         lower=plan.LOWER_LIF)
+    params = {"h": {"w_input": _w(ks[0], 5, 16)},
+              "ro": {"w_h": _w(ks[1], 16, 4)}}
+    x = _spikes(ks[2], (14, 3, 5), rate=0.5)
+    _assert_equiv(nodes, params, x, record=("h",))
+
+    def make_loss(run_fn):
+        def loss(pp):
+            _, o, _ = run_fn(nodes, pp, x)
+            return jnp.sum(jnp.sin(o * 1.3))
+        return loss
+
+    g1 = jax.grad(make_loss(events.run))(params)
+    g2 = jax.grad(make_loss(plan.run))(params)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=2e-4,
+                                                         rtol=2e-4), g1, g2)
+
+
+def test_plan_recurrent_subtract_reset_falls_back():
+    """The lifrec kernel implements the hard reset only: a self-recurrent
+    subtract-reset LIF must take the stepper (and still agree)."""
+    ks = jax.random.split(KEY, 3)
+    nodes = [
+        events.LayerNode("h", LIF(tau=0.8, v_th=0.7, reset="subtract"),
+                         ff_integrate, ("input", "self"), 10),
+        events.LayerNode("ro", LI(tau=0.9), ff_integrate, ("h",), 3),
+    ]
+    p = plan.compile_program(nodes)
+    assert p.segments[0].kind == plan.FALLBACK
+    assert "recurrent subtract reset" in p.segments[0].reason
+    params = {"h": {"w_input": _w(ks[0], 5, 10),
+                    "w_self": _w(ks[1], 10, 10, 0.3)},
+              "ro": {"w_h": _w(ks[2], 10, 3)}}
+    _assert_equiv(nodes, params, _spikes(KEY, (12, 2, 5), rate=0.5))
+
+
+# ---------------------------------------------------------------------------
 # dtype hygiene: integer spike inputs must not build integer membranes
 # ---------------------------------------------------------------------------
 

@@ -1,14 +1,23 @@
-"""Plasticity tests: STDP causality properties (hypothesis) + the
-accumulated-spike backprop identity (paper §IV-B)."""
+"""Plasticity tests: STDP causality properties (hypothesis), the
+declarative SynapseProgram IR (rule factories vs hand references,
+validation, registry), and the accumulated-spike backprop identity
+(paper §IV-B)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.plasticity import (STDPConfig, accumulated_spike_fc,
-                                   fuse_bn1d_fc, stdp_init, stdp_run,
-                                   stdp_step)
+from repro.core.neuron import Decay
+from repro.core.plasticity import (STDPConfig, SynapseProgram, TraceVar,
+                                   UpdateTerm, accumulated_spike,
+                                   accumulated_spike_fc, fuse_bn1d_fc,
+                                   make_synapse, pair_stdp, register_synapse,
+                                   reward_stdp, stdp_init, stdp_run,
+                                   stdp_step, synapse_init, synapse_run,
+                                   synapse_step, triplet_stdp,
+                                   validate_synapse_program)
 
 
 def _pair_run(dt_pre: int, dt_post: int, T: int = 20):
@@ -56,6 +65,168 @@ def test_stdp_bounds_respected():
     post = (rng.random((50, 2, 4)) < 0.5).astype(np.float32)
     w = stdp_run(cfg, jnp.zeros((8, 4)), jnp.asarray(pre), jnp.asarray(post))
     assert float(jnp.max(w)) <= 0.5 and float(jnp.min(w)) >= -0.5
+
+
+def _trains(seed, T=12, B=3, M=8, N=5, rate=0.4):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    pre = (jax.random.uniform(ks[0], (T, B, M)) < rate).astype(jnp.float32)
+    post = (jax.random.uniform(ks[1], (T, B, N)) < rate).astype(jnp.float32)
+    w = 0.3 * jax.random.normal(ks[2], (M, N), jnp.float32)
+    return pre, post, w
+
+
+def test_stdp_run_use_kernel_matches_reference():
+    """Regression: `use_kernel` used to be silently dropped by the scan
+    body, so the fused Pallas kernel never ran. Now it must run — and agree
+    with the einsum reference."""
+    pre, post, w = _trains(0, T=6, B=2, M=8, N=6)
+    cfg = STDPConfig()
+    w_ref = stdp_run(cfg, w, pre, post, use_kernel=False)
+    w_ker = stdp_run(cfg, w, pre, post, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(w_ker), np.asarray(w_ref),
+                               atol=1e-5, rtol=1e-5)
+    assert float(jnp.linalg.norm(w_ref - w)) > 0     # something was learned
+
+
+# ---------------------------------------------------------------------------
+# the SynapseProgram IR: factories vs hand references
+# ---------------------------------------------------------------------------
+
+
+def test_pair_stdp_program_matches_legacy_loop():
+    """The pair_stdp factory's per-step interpretation must reproduce the
+    hand-coded stdp_step/stdp_run trajectory exactly (weights AND traces)."""
+    pre, post, w = _trains(1)
+    cfg = STDPConfig()
+    prog = cfg.program
+    syn = synapse_run(prog, w, pre, post)
+    w_legacy = stdp_run(cfg, w, pre, post)
+    np.testing.assert_allclose(np.asarray(syn["w"]), np.asarray(w_legacy),
+                               atol=1e-6)
+    # traces too: replay the legacy loop and compare the finals
+    traces = stdp_init(w.shape[0], w.shape[1], pre.shape[1])
+    ww = w
+    for t in range(pre.shape[0]):
+        traces, ww = stdp_step(cfg, traces, ww, pre[t], post[t])
+    np.testing.assert_allclose(np.asarray(syn["x_pre"]),
+                               np.asarray(traces["x_pre"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(syn["x_post"]),
+                               np.asarray(traces["x_post"]), atol=1e-6)
+
+
+def test_triplet_stdp_slow_traces_read_previous_value():
+    """Triplet terms gate on the slow traces' pre-update values
+    (update="after"): a manual Pfister-Gerstner step must agree."""
+    prog = triplet_stdp(w_min=-5.0, w_max=5.0)
+    pre, post, w = _trains(2, T=10, B=2, M=6, N=4)
+    syn = synapse_init(prog, w, pre.shape[1])
+    tr = {k: syn[k] for k in ("r1", "r2", "o1", "o2")}
+    ww = w
+    taus = {t.name: t.decay.value for t in prog.traces}
+    amps = [t.amp for t in prog.terms]
+    for t in range(pre.shape[0]):
+        r1 = taus["r1"] * tr["r1"] + pre[t]
+        o1 = taus["o1"] * tr["o1"] + post[t]
+        # slow traces are READ old, then updated
+        dw = (amps[0] * jnp.einsum("bi,bj->ij", r1, post[t])
+              + amps[1] * jnp.einsum("bi,bj->ij", r1, post[t] * tr["o2"])
+              + amps[2] * jnp.einsum("bi,bj->ij", pre[t], o1)
+              + amps[3] * jnp.einsum("bi,bj->ij", pre[t] * tr["r2"], o1))
+        ww = jnp.clip(ww + dw, prog.w_min, prog.w_max)
+        tr = {"r1": r1, "o1": o1,
+              "r2": taus["r2"] * tr["r2"] + pre[t],
+              "o2": taus["o2"] * tr["o2"] + post[t]}
+    syn = synapse_run(prog, w, pre, post)
+    np.testing.assert_allclose(np.asarray(syn["w"]), np.asarray(ww),
+                               atol=1e-5)
+    for k in tr:
+        np.testing.assert_allclose(np.asarray(syn[k]), np.asarray(tr[k]),
+                                   atol=1e-5)
+
+
+def test_reward_stdp_gated_by_modulator():
+    """No reward -> frozen weights; constant unit reward -> exactly pair
+    STDP; reward scales the update linearly."""
+    pre, post, w = _trains(3)
+    T = pre.shape[0]
+    prog = reward_stdp()
+    frozen = synapse_run(prog, w, pre, post)            # mod=None
+    np.testing.assert_allclose(np.asarray(frozen["w"]), np.asarray(w))
+    ones = synapse_run(prog, w, pre, post, mod=jnp.ones((T,)))
+    pair = synapse_run(pair_stdp(), w, pre, post)
+    np.testing.assert_allclose(np.asarray(ones["w"]), np.asarray(pair["w"]),
+                               atol=1e-6)
+    half = synapse_run(prog, w, pre, post, mod=0.5 * jnp.ones((T,)))
+    # wide bounds -> linear regime: half reward gives half the update
+    np.testing.assert_allclose(np.asarray(half["w"] - w),
+                               0.5 * np.asarray(ones["w"] - w), atol=1e-5)
+
+
+def test_accumulated_spike_rule_matches_closed_form():
+    """Teaching signal on the final step only: the learned update must be
+    exactly lr * (sum_t s_pre) (x) delta — the paper's accumulated-spike
+    FC update, as a synapse program."""
+    pre, post, w = _trains(4, T=9, B=2, M=7, N=3)
+    lr = 0.05
+    delta = jax.random.normal(jax.random.PRNGKey(9), (2, 3), jnp.float32)
+    T = pre.shape[0]
+    mod = jnp.zeros((T, 2, 3)).at[-1].set(delta)
+    syn = synapse_run(accumulated_spike(lr=lr), w, pre, post, mod=mod)
+    expect = w + lr * jnp.einsum("bi,bj->ij", jnp.sum(pre, 0), delta)
+    np.testing.assert_allclose(np.asarray(syn["w"]), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_synapse_program_validation():
+    ok = pair_stdp()
+    assert validate_synapse_program(ok) is ok
+    with pytest.raises(ValueError, match="reserved"):
+        validate_synapse_program(SynapseProgram(
+            traces=(TraceVar("mod", "pre", Decay("const", 0.9)),),
+            terms=(UpdateTerm(0.1),)))
+    with pytest.raises(ValueError, match="bad source"):
+        validate_synapse_program(SynapseProgram(
+            traces=(TraceVar("x", "sideways", Decay("const", 0.9)),),
+            terms=(UpdateTerm(0.1),)))
+    with pytest.raises(ValueError, match="at least one update term"):
+        validate_synapse_program(SynapseProgram(traces=(), terms=()))
+    with pytest.raises(ValueError, match="unknown factor"):
+        validate_synapse_program(SynapseProgram(
+            traces=(), terms=(UpdateTerm(0.1, pre=("ghost",)),)))
+    with pytest.raises(ValueError, match="post-side"):
+        validate_synapse_program(SynapseProgram(
+            traces=(), terms=(UpdateTerm(0.1, pre=("mod",)),)))
+    with pytest.raises(ValueError, match="reads a pre trace"):
+        validate_synapse_program(SynapseProgram(
+            traces=(TraceVar("x", "pre", Decay("const", 0.9)),),
+            terms=(UpdateTerm(0.1, post=("x",)),)))
+    with pytest.raises(ValueError, match="w_min"):
+        validate_synapse_program(SynapseProgram(
+            traces=(), terms=(UpdateTerm(0.1),), w_min=1.0, w_max=-1.0))
+
+
+def test_synapse_registry_roundtrip_and_duplicates():
+    made = make_synapse("pair_stdp", a_plus=0.02)
+    assert made.terms[0].amp == 0.02
+    with pytest.raises(KeyError):
+        make_synapse("no_such_rule")
+    with pytest.raises(ValueError, match="already registered"):
+        register_synapse("pair_stdp", pair_stdp)
+    # override is explicit and reversible
+    register_synapse("pair_stdp", pair_stdp, override=True)
+    for name in ("pair_stdp", "triplet_stdp", "reward_stdp",
+                 "accumulated_spike"):
+        validate_synapse_program(make_synapse(name))
+
+
+def test_synapse_step_is_jit_and_scan_safe():
+    prog = pair_stdp()
+    pre, post, w = _trains(5, T=4)
+    syn = synapse_init(prog, w, pre.shape[1])
+    stepped = jax.jit(lambda s, a, b: synapse_step(prog, s, a, b))(
+        syn, pre[0], post[0])
+    assert set(stepped) == set(syn)
+    assert stepped["w"].shape == w.shape
 
 
 # ---------------------------------------------------------------------------

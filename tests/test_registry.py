@@ -22,7 +22,7 @@ ALL_KERNELS = registry.names()
 
 def test_all_families_registered():
     assert set(ALL_KERNELS) == {"linrec", "lif", "lifrec", "alif", "alifrec",
-                                "spikemm", "attention", "stdp"}
+                                "spikemm", "attention", "stdp", "stdp_seq"}
     for name in ALL_KERNELS:
         spec = registry.get(name)
         assert spec.make_inputs is not None, name
