@@ -27,6 +27,11 @@ from repro.kernels.spikemm.ops import occupancy_fraction
 
 RATES = (0.012, 0.025, 0.08, 0.13, 0.33)
 
+# spike densities for the dense-vs-sparse channel sweep (the nightly
+# speedup-vs-sparsity curve the perf gate tracks)
+SPARSITY_DENSITIES = (0.01, 0.05, 0.2, 0.5)
+SPARSITY_SHAPE = (2048, 2048, 512)
+
 # serving-scale shapes per kernel family (CPU-interpret friendly; on TPU the
 # same sweep runs the real Mosaic kernels on the same buckets)
 TUNE_SHAPES = {
@@ -103,6 +108,72 @@ def run_autotune() -> Dict:
     return out
 
 
+def run_sparsity_sweep(repeats: int = 7) -> Dict:
+    """Dense vs block-sparse spikemm channel on population-packed rasters.
+
+    Paired adjacent timing (same machine state for both channels per
+    repeat, median ratio) at the densities the perf gate tracks; also
+    retunes and persists the dispatch threshold for this shape so the
+    nightly artifact carries the crossover the `auto` policy will use.
+    """
+    import time
+
+    from repro.kernels.spikemm.sparse import (_packed_raster,
+                                              tune_sparse_threshold)
+
+    print("=== block-sparse spikemm: dense vs sparse channel ===")
+    M, K, N = SPARSITY_SHAPE
+    spec = registry.get("spikemm")
+    key = jax.random.PRNGKey(7)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N), jnp.float32)
+    blocks = spec.resolve_blocks({"M": M, "K": K, "N": N}, use_cache=False)
+    use_pallas = registry.use_pallas()
+    interpret = registry.interpret_mode()
+
+    def dense(s):
+        if use_pallas:
+            return spec.pallas(s, w, blocks=blocks, interpret=interpret)
+        return spec.ref(s, w)
+
+    def sparse(s):
+        ch = spec.channels["sparse"]
+        if use_pallas:
+            return ch.pallas(s, w, blocks=blocks, interpret=interpret)
+        return ch.ref(s, w, blocks=blocks)
+
+    out = {"dims": {"M": M, "K": K, "N": N}, "blocks": dict(blocks),
+           "rows": {}}
+    for d in SPARSITY_DENSITIES:
+        s = _packed_raster(jax.random.fold_in(key, 2), M, K, d)
+        occ = float(occupancy_fraction(s, blocks["bm"], blocks["bk"]))
+        dense(s).block_until_ready()                 # compile + warm
+        sparse(s).block_until_ready()
+        td, ts = [], []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            dense(s).block_until_ready()
+            t1 = time.perf_counter()
+            sparse(s).block_until_ready()
+            td.append(t1 - t0)
+            ts.append(time.perf_counter() - t1)
+        ratios = sorted(a / b for a, b in zip(td, ts))
+        row = {"density": d, "occupancy": occ,
+               "dense_ms": 1e3 * min(td), "sparse_ms": 1e3 * min(ts),
+               "speedup_x": ratios[len(ratios) // 2],
+               "speedup_minmax_x": (ratios[0], ratios[-1])}
+        out["rows"][str(d)] = row
+        print(f"density {d:5.2f}  occ {occ:.3f}  "
+              f"dense {row['dense_ms']:7.2f} ms  "
+              f"sparse {row['sparse_ms']:7.2f} ms  "
+              f"({row['speedup_x']:5.2f}x)")
+    th, report = tune_sparse_threshold(M, K, N, repeats=max(2, repeats // 2))
+    out["tuned_threshold"] = th
+    out["threshold_ladder"] = report["ladder"]
+    print(f"dispatch threshold (occupancy crossover): {th:.3f} "
+          f"-> tuning cache")
+    return out
+
+
 def run() -> Dict:
     print("=== event-gated block sparsity: surviving FLOP fraction ===")
     key = jax.random.PRNGKey(0)
@@ -135,6 +206,7 @@ def run() -> Dict:
           f"HBM streams identical (bandwidth-bound => free)")
     out["linrec_expansion"] = expansion
 
+    out["spikemm_sparsity"] = run_sparsity_sweep()
     out["autotune"] = run_autotune()
     return out
 

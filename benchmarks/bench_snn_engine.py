@@ -120,6 +120,79 @@ def measure(name: str, nodes, params, x, repeats: int = 15) -> Dict:
     }
 
 
+SPARSITY_DENSITIES = (0.01, 0.05, 0.2, 0.5)
+
+
+def run_sparsity_rows(repeats: int = 7) -> Dict:
+    """Engine-level sparsity sweep: eager plan.run, spikemm channel pinned.
+
+    The hoisted all-T INTEG goes through the spikemm registry dispatch, so
+    the sparse channel needs no plan-compiler changes — but it only
+    engages when the raster is *concrete* (under jit the occupancy is
+    unknowable and dispatch routes dense). These rows therefore run the
+    plan engine eagerly, pinning `REPRO_SPIKEMM_SPARSE` to `never` vs
+    `always` per timing leg, on population-packed input rasters: the
+    end-to-end view of the kernel-level sweep in `bench_kernels`.
+    """
+    import os
+
+    from repro.kernels.spikemm.sparse import _packed_raster
+
+    print("=== plan engine: dense vs block-sparse INTEG (eager) ===")
+    key = jax.random.PRNGKey(5)
+    # wide input layer so the hoisted INTEG dominates the plan step — the
+    # regime the sparse channel targets (mapped cores see wide fan-in)
+    n_in = 4096
+    nodes, params = make_dhsnn_shd(key, n_in=n_in, n_hidden=512,
+                                   dendritic=False)
+    compiled = plan.compile_program(nodes)
+    T, B = 256, 8
+    out: Dict[str, Dict] = {}
+    env = "REPRO_SPIKEMM_SPARSE"
+    prev = os.environ.get(env)
+    try:
+        for d in SPARSITY_DENSITIES:
+            x = _packed_raster(jax.random.fold_in(key, 3), T * B, n_in,
+                               d).reshape(T, B, n_in)
+            occ = float(occupancy_fraction(x.reshape(T * B, n_in)))
+
+            def run_once():
+                return plan.run(nodes, params, x, plan=compiled)[1]
+
+            os.environ[env] = "never"
+            base = run_once()
+            base.block_until_ready()
+            os.environ[env] = "always"
+            spar = run_once()
+            err = float(jnp.max(jnp.abs(spar - base)))
+            td, ts = [], []
+            for _ in range(repeats):
+                os.environ[env] = "never"
+                t0 = time.perf_counter()
+                run_once().block_until_ready()
+                t1 = time.perf_counter()
+                os.environ[env] = "always"
+                run_once().block_until_ready()
+                td.append(t1 - t0)
+                ts.append(time.perf_counter() - t1)
+            ratios = sorted(a / b for a, b in zip(td, ts))
+            row = {"density": d, "input_block_occupancy": occ,
+                   "dense_ms": 1e3 * min(td), "sparse_ms": 1e3 * min(ts),
+                   "speedup_x": ratios[len(ratios) // 2],
+                   "max_abs_err": err}
+            out[str(d)] = row
+            print(f"density {d:5.2f}  occ {occ:.3f}  "
+                  f"dense {row['dense_ms']:8.2f} ms  "
+                  f"sparse {row['sparse_ms']:8.2f} ms  "
+                  f"({row['speedup_x']:5.2f}x, err {err:.1e})")
+    finally:
+        if prev is None:
+            os.environ.pop(env, None)
+        else:
+            os.environ[env] = prev
+    return out
+
+
 def run() -> Dict:
     print("=== SNN engine: stepper vs compiled execution plan ===")
     out: Dict[str, Dict] = {}
@@ -133,6 +206,7 @@ def run() -> Dict:
     assert out["shd_ff"]["max_abs_err"] < 1e-4
     print(f"shd_ff speedup {out['shd_ff']['speedup_x']:.2f}x "
           f"(acceptance floor: 2x on the default backend)")
+    out["spikemm_sparsity"] = run_sparsity_rows()
     return out
 
 

@@ -1,0 +1,241 @@
+"""Perf-regression gate: diff fresh BENCH_*.json runs against checked-in
+baselines and fail CI when a tracked row regresses beyond tolerance.
+
+    PYTHONPATH=src python -m benchmarks.compare experiments \
+        [--baselines benchmarks/baselines] [--tolerance 0.2] [--gate]
+
+Design points (why this is robust enough to gate on):
+
+  * **Relative metrics only.** Baselines are recorded on one machine and
+    replayed on another, so absolute milliseconds are not portable. The
+    tracked rows are speedup ratios (plan-vs-stepper, sparse-vs-dense)
+    measured with *paired adjacent* timing inside each bench — those
+    cancel host speed and survive a runner swap.
+  * **Min-of-k noise guard.** The fresh side may be `--repeats K` output
+    (`r0/..r{K-1}/` subdirs); each tracked row takes its *best* value
+    across repeats before gating, so one noisy repeat cannot fake a
+    regression. The median across repeats is reported alongside.
+  * **Manifest-driven.** `benchmarks/baselines/tracked.json` lists the
+    gated rows as `{suite, path, direction, note}` where `path` is a
+    "/"-separated key path into the suite JSON ("/" because bench keys
+    themselves contain dots, e.g. density "0.01"). `direction: higher`
+    means bigger is better; a row regresses when
+    best/baseline < 1 - tolerance (reciprocal for `lower`).
+  * **Explicit refresh.** `--update-baselines` rewrites the checked-in
+    baseline files from the fresh run (tracked paths take the
+    best-across-repeats value); commit the result. Perf *improvements*
+    never fail the gate — they just make the next `--update-baselines`
+    raise the bar.
+
+Exit code: 0 clean, 1 regression (only with `--gate`), 2 usage/IO error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional
+
+DEFAULT_TOLERANCE = 0.20
+BASELINES_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+
+def get_path(doc: Any, path: str):
+    """Walk a "/"-separated key path through nested dicts."""
+    node = doc
+    for part in path.split("/"):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def set_path(doc: Dict, path: str, value) -> bool:
+    parts = path.split("/")
+    node = doc
+    for part in parts[:-1]:
+        if not isinstance(node, dict) or part not in node:
+            return False
+        node = node[part]
+    if not isinstance(node, dict) or parts[-1] not in node:
+        return False
+    node[parts[-1]] = value
+    return True
+
+
+def repeat_dirs(fresh_dir: str) -> List[str]:
+    """`--repeats K` layout (r0/..r{K-1}/) or a single flat run dir."""
+    subs = sorted(d for d in glob.glob(os.path.join(fresh_dir, "r*"))
+                  if os.path.isdir(d) and d.rsplit(os.sep, 1)[-1][1:].isdigit())
+    return subs or [fresh_dir]
+
+
+def load_suite(run_dir: str, suite: str) -> Optional[Dict]:
+    path = os.path.join(run_dir, f"BENCH_{suite}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(fresh_runs: Dict[str, List[Dict]], baselines: Dict[str, Dict],
+            tracked: List[Dict], tolerance: float = DEFAULT_TOLERANCE
+            ) -> Dict:
+    """Pure core (unit-testable): diff loaded docs along the manifest.
+
+    fresh_runs: suite -> list of loaded BENCH docs (one per repeat);
+    baselines: suite -> loaded baseline BENCH doc; tracked: manifest rows.
+    Returns {"rows": [...], "regressions": [...], "missing": [...]}.
+    """
+    rows, regressions, missing = [], [], []
+    for spec in tracked:
+        suite, path = spec["suite"], spec["path"]
+        direction = spec.get("direction", "higher")
+        tol = float(spec.get("tolerance", tolerance))
+        base_doc = baselines.get(suite)
+        base = get_path(base_doc, path) if base_doc else None
+        fresh = [v for v in (get_path(doc, path)
+                             for doc in fresh_runs.get(suite, []))
+                 if isinstance(v, (int, float))]
+        if not isinstance(base, (int, float)) or not fresh:
+            missing.append({"suite": suite, "path": path,
+                            "have_baseline": isinstance(base, (int, float)),
+                            "n_fresh": len(fresh)})
+            continue
+        best = max(fresh) if direction == "higher" else min(fresh)
+        med = sorted(fresh)[len(fresh) // 2]
+        if direction == "higher":
+            ratio, med_ratio = best / base, med / base
+        else:
+            ratio, med_ratio = base / best, base / med
+        row = {"suite": suite, "path": path, "direction": direction,
+               "baseline": base, "best": best, "median": med,
+               "ratio": ratio, "median_ratio": med_ratio,
+               "tolerance": tol, "n_repeats": len(fresh),
+               "regressed": ratio < 1.0 - tol,
+               "note": spec.get("note", "")}
+        rows.append(row)
+        if row["regressed"]:
+            regressions.append(row)
+    return {"rows": rows, "regressions": regressions, "missing": missing,
+            "tolerance": tolerance}
+
+
+def render_table(report: Dict) -> str:
+    lines = ["| suite | metric | baseline | best | ratio | status |",
+             "|---|---|---|---|---|---|"]
+    for r in report["rows"]:
+        status = "**REGRESSED**" if r["regressed"] else "ok"
+        lines.append(
+            f"| {r['suite']} | `{r['path']}` | {r['baseline']:.3f} | "
+            f"{r['best']:.3f} | {r['ratio']:.2f} | {status} |")
+    for m in report["missing"]:
+        lines.append(f"| {m['suite']} | `{m['path']}` | — | — | — | "
+                     f"missing |")
+    return "\n".join(lines)
+
+
+def update_baselines(fresh_dir: str, baselines_dir: str,
+                     tracked: List[Dict]) -> List[str]:
+    """Refresh baseline files: copy the first repeat, then overwrite every
+    tracked path with its best-across-repeats value."""
+    runs = repeat_dirs(fresh_dir)
+    os.makedirs(baselines_dir, exist_ok=True)
+    updated = []
+    for suite in sorted({t["suite"] for t in tracked}):
+        src = next((os.path.join(d, f"BENCH_{suite}.json") for d in runs
+                    if os.path.exists(os.path.join(d,
+                                                   f"BENCH_{suite}.json"))),
+                   None)
+        if src is None:
+            continue
+        dst = os.path.join(baselines_dir, f"BENCH_{suite}.json")
+        shutil.copyfile(src, dst)
+        with open(dst) as f:
+            doc = json.load(f)
+        docs = [d for d in (load_suite(r, suite) for r in runs) if d]
+        for spec in (t for t in tracked if t["suite"] == suite):
+            vals = [v for v in (get_path(d, spec["path"]) for d in docs)
+                    if isinstance(v, (int, float))]
+            if vals:
+                best = (max(vals) if spec.get("direction", "higher") ==
+                        "higher" else min(vals))
+                set_path(doc, spec["path"], best)
+        with open(dst, "w") as f:
+            json.dump(doc, f, indent=1, default=str)
+        updated.append(dst)
+    return updated
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff fresh BENCH_*.json against checked-in baselines.")
+    ap.add_argument("fresh_dir",
+                    help="fresh bench output dir (flat, or r*/ repeats)")
+    ap.add_argument("--baselines", default=BASELINES_DIR)
+    ap.add_argument("--tracked", default=None,
+                    help="manifest path (default <baselines>/tracked.json)")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE)
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 when any tracked row regresses")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="rewrite the baseline files from this run")
+    ap.add_argument("--github-summary", action="store_true",
+                    help="append the diff table to $GITHUB_STEP_SUMMARY")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the full diff report as JSON")
+    args = ap.parse_args(argv)
+
+    tracked_path = args.tracked or os.path.join(args.baselines,
+                                                "tracked.json")
+    if not os.path.exists(tracked_path):
+        print(f"no tracked manifest at {tracked_path}")
+        return 2
+    with open(tracked_path) as f:
+        tracked = json.load(f)["tracked"]
+
+    if args.update_baselines:
+        updated = update_baselines(args.fresh_dir, args.baselines, tracked)
+        for path in updated:
+            print(f"baseline <- {path}")
+        if not updated:
+            print(f"no BENCH_*.json found under {args.fresh_dir}")
+            return 2
+        return 0
+
+    runs = repeat_dirs(args.fresh_dir)
+    fresh_runs = {s: [d for d in (load_suite(r, s) for r in runs) if d]
+                  for s in {t["suite"] for t in tracked}}
+    baselines = {s: load_suite(args.baselines, s)
+                 for s in {t["suite"] for t in tracked}}
+    report = compare(fresh_runs, {k: v for k, v in baselines.items() if v},
+                     tracked, args.tolerance)
+
+    table = render_table(report)
+    print(f"perf gate: {len(runs)} repeat(s), "
+          f"tolerance {args.tolerance:.0%}\n")
+    print(table)
+    n_reg = len(report["regressions"])
+    verdict = (f"\n{n_reg} tracked row(s) regressed beyond "
+               f"{args.tolerance:.0%}" if n_reg else
+               "\nall tracked rows within tolerance")
+    print(verdict)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, default=str)
+        print(f"report -> {args.json}")
+    if args.github_summary and os.environ.get("GITHUB_STEP_SUMMARY"):
+        with open(os.environ["GITHUB_STEP_SUMMARY"], "a") as f:
+            f.write(f"## Perf gate\n\n{table}\n{verdict}\n")
+    if report["missing"]:
+        print(f"warning: {len(report['missing'])} tracked row(s) missing "
+              f"from this run (not gated)")
+    return 1 if (args.gate and n_reg) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,6 +5,10 @@ Emits machine-readable JSON so CI can archive a perf trajectory:
   experiments/BENCH_<suite>.json   one file per suite, schema below
   experiments/bench_results.json   the aggregate (back-compat)
 
+`--repeats K` replays the selection into `r0/..r{K-1}/` subdirectories;
+`benchmarks/compare.py` takes the per-row best across repeats before
+gating, so one noisy repeat cannot fake a regression.
+
 Per-suite schema (v1):
   {"schema": 1, "suite": str, "created_unix": float, "host": {...},
    "seconds": float, "ok": bool, "result": {...} | "error": str}
@@ -74,6 +78,9 @@ def main(argv=None) -> int:
                     help="directory for BENCH_*.json + aggregate")
     ap.add_argument("--list", action="store_true",
                     help="list suite names and exit")
+    ap.add_argument("--repeats", type=int, default=1, metavar="K",
+                    help="run the selection K times into r0/..r{K-1}/ "
+                         "subdirs (the perf gate's min-of-k noise guard)")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -90,8 +97,21 @@ def main(argv=None) -> int:
             ap.error(f"unknown suites {unknown}; known: {sorted(known)}")
         selected = [(n, m) for n, m in SUITES if n in wanted]
 
+    if args.repeats < 1:
+        ap.error("--repeats must be >= 1")
+    if args.repeats > 1:
+        rc = 0
+        for i in range(args.repeats):
+            sub = os.path.join(args.out_dir, f"r{i}")
+            print(f"\n########## repeat {i} -> {sub} ##########")
+            rc |= _run_suites(selected, sub)
+        return rc
+    return _run_suites(selected, args.out_dir)
+
+
+def _run_suites(selected, out_dir: str) -> int:
     host = _host_meta()
-    os.makedirs(args.out_dir, exist_ok=True)
+    os.makedirs(out_dir, exist_ok=True)
     aggregate = {"schema": SCHEMA_VERSION, "created_unix": time.time(),
                  "host": host, "suites": {}}
     failures = 0
@@ -109,13 +129,13 @@ def main(argv=None) -> int:
             entry["ok"] = False
             traceback.print_exc()
         entry["seconds"] = round(time.time() - t0, 1)
-        path = os.path.join(args.out_dir, f"BENCH_{name}.json")
+        path = os.path.join(out_dir, f"BENCH_{name}.json")
         with open(path, "w") as f:
             json.dump(entry, f, indent=1, default=str)
         print(f"[{name}] {'ok' if entry['ok'] else 'FAILED'} "
               f"in {entry['seconds']}s -> {path}")
         aggregate["suites"][name] = entry
-    agg_path = os.path.join(args.out_dir, "bench_results.json")
+    agg_path = os.path.join(out_dir, "bench_results.json")
     with open(agg_path, "w") as f:
         json.dump(aggregate, f, indent=1, default=str)
     print(f"\n{'='*72}\nwrote {agg_path}; "

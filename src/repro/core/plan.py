@@ -46,7 +46,11 @@ INTEG is hoisted out of the time loop for every fused segment: one
 registry-dispatched `spikemm` over the (T*B, fan_in) spike matrix per feed
 (block-occupancy flags = the FINDIDX bitmap at MXU granularity); the
 branch convention (`snn_layers.branch_integrate`) hoists as one spikemm
-against the branch-flattened weight tensor. Everything that matches no
+against the branch-flattened weight tensor. Because that goes through the
+registry, the block-sparse spikemm channel engages with no plan changes:
+when the plan runs eagerly and the hoisted raster's measured occupancy is
+below the tuned threshold, dispatch skips silent blocks outright
+(`REPRO_SPIKEMM_SPARSE=never|auto|always` pins the choice). Everything that matches no
 pattern (extra states, untagged integrates, recurrent branch programs)
 runs through the stepper — per segment, with the fused neighbours'
 full-time outputs (delay-shifted as needed) fed in externally.

@@ -129,6 +129,22 @@ class BlockAxis:
 
 
 @dataclasses.dataclass(frozen=True)
+class Channel:
+    """An alternative implementation pair for a kernel family.
+
+    A channel is a *semantically identical* ref/Pallas pair that wins only
+    on some inputs (e.g. the block-sparse `spikemm` gather path, which
+    beats the dense kernel only below a block-occupancy threshold). Both
+    callables receive the resolved `blocks=` dict (the ref too — a channel
+    may restructure work at block granularity even off-TPU), and the Pallas
+    side additionally gets `interpret=`.
+    """
+
+    ref: Callable[..., Any]
+    pallas: Callable[..., Any]
+
+
+@dataclasses.dataclass(frozen=True)
 class KernelSpec:
     """Everything the registry needs to dispatch, tune, and verify a kernel."""
 
@@ -140,12 +156,23 @@ class KernelSpec:
     dims_of: Callable[..., Dict[str, int]]
     candidates: Tuple[Mapping[str, int], ...] = ()
     make_inputs: Optional[Callable[..., tuple]] = None
+    # static kwargs matching make_inputs' canonical args: machinery that
+    # calls spec.ref/spec.pallas directly (the autotuner) forwards these,
+    # since required statics otherwise only ride along dispatch() calls
+    tune_static: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     diff_argnums: Tuple[int, ...] = ()
     tol: float = 1e-4
     # (dims, blocks) -> estimated per-grid-step VMEM working set in bytes;
     # the autotuner prunes candidates that exceed the budget before timing.
     vmem_bytes: Optional[Callable[[Mapping[str, int], Mapping[str, int]],
                                   int]] = None
+    # named alternative implementation channels + the dispatch-time router:
+    # select_channel(*args, blocks=..., **static) returns a key into
+    # `channels` or None for the default (spec.ref / spec.pallas) pair. The
+    # router runs at trace/dispatch time, so it may inspect concrete values
+    # (e.g. measure occupancy) but must route conservatively on tracers.
+    channels: Mapping[str, Channel] = dataclasses.field(default_factory=dict)
+    select_channel: Optional[Callable[..., Optional[str]]] = None
 
     def resolve_blocks(self, dims: Mapping[str, int],
                        overrides: Optional[Mapping[str, int]] = None,
@@ -220,15 +247,31 @@ def dispatch(name: str, args: Sequence[Any], force_pallas: bool = False,
     `static` kwargs (thresholds, causal flags, learning rates, ...) are
     forwarded verbatim to whichever implementation wins. `overrides` pins
     individual block sizes, bypassing the tuning cache for those axes.
+
+    Families that registered `channels` + `select_channel` get a second
+    routing layer: the router picks an implementation channel per call
+    (e.g. block-sparse vs dense `spikemm` by measured occupancy), then the
+    usual ref-vs-Pallas policy applies within the chosen channel.
     """
     spec = get(name)
+    blocks = None
+    if spec.select_channel is not None:
+        blocks = spec.resolve_blocks(spec.dims_of(*args), overrides)
+        choice = spec.select_channel(*args, blocks=blocks, **static)
+        if choice is not None:
+            ch = spec.channels[choice]
+            if not use_pallas(force_pallas):
+                return ch.ref(*args, blocks=blocks, **static)
+            return ch.pallas(*args, blocks=blocks,
+                             interpret=interpret_mode(), **static)
     if not use_pallas(force_pallas):
         return spec.ref(*args, **static)
-    blocks = spec.resolve_blocks(spec.dims_of(*args), overrides)
+    if blocks is None:
+        blocks = spec.resolve_blocks(spec.dims_of(*args), overrides)
     return spec.pallas(*args, blocks=blocks, interpret=interpret_mode(),
                        **static)
 
 
-__all__ = ["BlockAxis", "KernelSpec", "register", "get", "names",
+__all__ = ["BlockAxis", "Channel", "KernelSpec", "register", "get", "names",
            "ensure_registered", "dispatch", "fit_block", "exact_block",
            "use_pallas", "interpret_mode"]

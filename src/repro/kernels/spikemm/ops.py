@@ -9,34 +9,100 @@ event-gated, which is the paper's point that learning, too, is event-driven).
 Block sizes: `bm`/`bk`/`bn` default to None, meaning the registry resolves
 them (tuning cache, then the spec defaults 128/512/512); an explicit int
 pins that axis for the call.
+
+Two implementation channels share those blocks:
+
+  * **dense** (the default pair): full (M/bm, N/bn, K/bk) grid, MXU work
+    gated per block on the occupancy bitmap;
+  * **sparse** (`sparse.py`): the grid iterates a compacted list of
+    occupied blocks via scalar-prefetch index maps; off-TPU the gather
+    ref does compute proportional to occupancy.
+
+`_select_channel` routes between them at dispatch time: the
+`REPRO_SPIKEMM_SPARSE=never|auto|always` env pins the choice; `auto` (the
+default) measures the block-occupancy fraction when the raster is
+concrete and goes sparse below the tuned threshold
+(`sparse.tune_sparse_threshold`, cached per backend/shape bucket;
+`_SPARSE_THRESHOLD_DEFAULT` on a cache miss). Tracers route dense: the
+occupancy of an abstract raster is unknowable, and a wrong sparse guess
+(capacity-padded grid) would cost rather than save.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import registry
+from repro.kernels import registry, tuning
 from repro.kernels.common import pad_axis
 from repro.kernels.spikemm.kernel import spikemm_pallas
 from repro.kernels.spikemm.ref import spikemm_ref
+from repro.kernels.spikemm.sparse import (compact_blocks,
+                                          spikemm_sparse_pallas,
+                                          spikemm_sparse_ref)
+
+_ENV_SPARSE = "REPRO_SPIKEMM_SPARSE"
+_SPARSE_THRESHOLD_DEFAULT = 0.25
 
 
+@functools.partial(jax.jit, static_argnums=(1, 2))
 def block_occupancy(spikes: jax.Array, bm: int, bk: int) -> jax.Array:
-    """(M/bm, K/bk) int32: 1 where the spike block has any nonzero."""
+    """(M/bm, K/bk) int32: 1 where the spike block has any nonzero.
+
+    Jitted (static block shape): eager callers — the dispatch router and
+    the sparse ref channel measure occupancy on concrete rasters every
+    call — must not pay op-by-op reduction cost on an M*K pass. The
+    reduction runs contiguous-axis-first on booleans (any over bk, then
+    over bm): a strided (bm, bk) max lowers ~6x slower on CPU."""
     M, K = spikes.shape
-    blk = spikes.reshape(M // bm, bm, K // bk, bk)
-    return (jnp.max(jnp.abs(blk), axis=(1, 3)) > 0).astype(jnp.int32)
+    nz = (spikes != 0).reshape(M, K // bk, bk).any(-1)
+    return nz.reshape(M // bm, bm, K // bk).any(1).astype(jnp.int32)
 
 
-def occupancy_fraction(spikes: jax.Array, bm: int = 128, bk: int = 512):
-    """Fraction of blocks with events — the kernel's effective FLOP fraction."""
+def resolve_block_shape(M: int, K: int) -> dict:
+    """The (bm, bk) the kernel actually skips with for an (M, K) raster:
+    the spec's per-axis fit of the preferred sizes. (Cache-tuned overrides
+    additionally need N; callers holding resolved blocks pass them
+    directly.)"""
+    spec = registry.get("spikemm")
+    out = {}
+    for ax in spec.block_axes:
+        n = {"M": M, "K": K}.get(ax.dim)
+        if n is not None:
+            out[ax.name] = registry.fit_block(n, ax.preferred, ax.align)
+    return out
+
+
+def occupancy_fraction(spikes: jax.Array, bm: int = None, bk: int = None):
+    """Fraction of blocks with events — the kernel's effective FLOP fraction.
+
+    `bm`/`bk` default to the block shape dispatch resolves for this raster
+    (NOT a fixed 512: for e.g. K=300 the kernel pads to bk=384 and skips
+    384-wide blocks, and the reported fraction must match what is actually
+    skipped). Callers that already hold the resolved blocks pass them."""
+    if bm is None or bk is None:
+        resolved = resolve_block_shape(*spikes.shape)
+        bm = bm if bm is not None else resolved["bm"]
+        bk = bk if bk is not None else resolved["bk"]
     s, _ = pad_axis(spikes, 0, bm)
     s, _ = pad_axis(s, 1, bk)
     f = block_occupancy(s, bm, bk)
     return jnp.mean(f.astype(jnp.float32))
+
+
+def sparse_threshold(dims) -> float:
+    """Occupancy fraction below which dispatch routes to the sparse channel.
+
+    Tuned per (backend, shape bucket) by `sparse.tune_sparse_threshold`
+    (stored as permille under kernel key "spikemm.sparse_th", seeded in the
+    CI cache for the bench shapes); conservative default on a miss."""
+    tuned = tuning.lookup_tuned("spikemm.sparse_th", dims)
+    if tuned and "permille" in tuned:
+        return tuned["permille"] / 1000.0
+    return _SPARSE_THRESHOLD_DEFAULT
 
 
 def _pallas_impl(spikes, w, *, blocks, interpret):
@@ -55,6 +121,48 @@ def _pallas_impl(spikes, w, *, blocks, interpret):
 
 def _ref_impl(spikes, w):
     return spikemm_ref(spikes, w.astype(spikes.dtype))
+
+
+def _sparse_ref_impl(spikes, w, *, blocks):
+    bm, bk = blocks["bm"], blocks["bk"]
+    s_p, _ = pad_axis(spikes, 0, bm)
+    s_p, _ = pad_axis(s_p, 1, bk)
+    w_p, _ = pad_axis(w.astype(spikes.dtype), 0, bk)
+    flags = block_occupancy(s_p, bm, bk)
+    out = spikemm_sparse_ref(flags, s_p, w_p, bm=bm, bk=bk)
+    return out[:spikes.shape[0], :w.shape[1]]
+
+
+def _sparse_pallas_impl(spikes, w, *, blocks, interpret):
+    M, K = spikes.shape
+    N = w.shape[1]
+    bm, bk, bn = blocks["bm"], blocks["bk"], blocks["bn"]
+    s_p, _ = pad_axis(spikes, 0, bm)
+    s_p, _ = pad_axis(s_p, 1, bk)
+    w_p, _ = pad_axis(w.astype(spikes.dtype), 0, bk)
+    w_p, _ = pad_axis(w_p, 1, bn)
+    flags = block_occupancy(s_p, bm, bk)
+    ii, kk, act = compact_blocks(flags)
+    out = spikemm_sparse_pallas(ii, kk, act, s_p, w_p, bm=bm, bk=bk, bn=bn,
+                                interpret=interpret)
+    return out[:M, :N]
+
+
+def _select_channel(spikes, w, *, blocks):
+    """Dispatch-time router: sparse below the tuned occupancy threshold."""
+    mode = os.environ.get(_ENV_SPARSE, "auto")
+    if mode not in ("never", "auto", "always"):
+        raise ValueError(f"{_ENV_SPARSE}={mode!r}: "
+                         "expected 'never', 'auto', or 'always'")
+    if mode == "never":
+        return None
+    if mode == "always":
+        return "sparse"
+    if isinstance(spikes, jax.core.Tracer):
+        return None                  # abstract raster: occupancy unknowable
+    occ = float(occupancy_fraction(spikes, blocks["bm"], blocks["bk"]))
+    dims = {"M": spikes.shape[0], "K": spikes.shape[1], "N": w.shape[1]}
+    return "sparse" if occ <= sparse_threshold(dims) else None
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
@@ -114,4 +222,7 @@ registry.register(registry.KernelSpec(
     # spike + weight blocks in, out block + fp32 accumulator
     vmem_bytes=lambda dims, b: 4 * (b["bm"] * b["bk"] + b["bk"] * b["bn"]
                                     + 2 * b["bm"] * b["bn"]),
+    channels={"sparse": registry.Channel(ref=_sparse_ref_impl,
+                                         pallas=_sparse_pallas_impl)},
+    select_channel=_select_channel,
 ))

@@ -115,6 +115,7 @@ registry.register(registry.KernelSpec(
     candidates=({"bm": 128, "bn": 128}, {"bm": 128, "bn": 256},
                 {"bm": 256, "bn": 128}, {"bm": 512, "bn": 256}),
     make_inputs=_make_seq_inputs,
+    tune_static=_SEQ_STATIC,
     diff_argnums=(),                          # weight write: forward-only
     tol=1e-4,
     # w block in/out + the K (TB, block) term-plane slabs

@@ -190,6 +190,7 @@ def autotune(name: str, args: Optional[tuple] = None, *,
             raise ValueError(f"kernel {name!r} has no make_inputs; "
                              "pass explicit args to autotune()")
         args = spec.make_inputs(jax.random.PRNGKey(0))
+    static = {**spec.tune_static, **static}   # required statics (e.g. amps)
     if cache is None:  # NOT `or`: an empty TuningCache is falsy (__len__)
         cache = default_cache()
     dims = spec.dims_of(*args)

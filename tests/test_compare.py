@@ -1,0 +1,147 @@
+"""Perf-gate unit tests: benchmarks/compare.py must catch an injected
+synthetic regression (the acceptance criterion is proven HERE, not by
+breaking live CI), tolerate single-repeat noise via min-of-k, and support
+the --update-baselines refresh flow."""
+
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks import compare
+
+
+def _doc(**rows):
+    """A minimal BENCH_<suite>.json-shaped doc with a result payload."""
+    return {"schema": 1, "suite": "kernels", "ok": True,
+            "result": {"spikemm_sparsity": {"rows": {
+                k: {"speedup_x": v} for k, v in rows.items()}}}}
+
+
+TRACKED = [
+    {"suite": "kernels",
+     "path": "result/spikemm_sparsity/rows/0.01/speedup_x",
+     "direction": "higher"},
+    {"suite": "kernels",
+     "path": "result/spikemm_sparsity/rows/0.05/speedup_x",
+     "direction": "higher"},
+]
+
+
+def test_path_walk_handles_dotted_keys():
+    doc = _doc(**{"0.01": 4.0})
+    assert compare.get_path(
+        doc, "result/spikemm_sparsity/rows/0.01/speedup_x") == 4.0
+    assert compare.get_path(doc, "result/missing/x") is None
+    assert compare.set_path(
+        doc, "result/spikemm_sparsity/rows/0.01/speedup_x", 5.0)
+    assert doc["result"]["spikemm_sparsity"]["rows"]["0.01"]["speedup_x"] == 5
+
+
+def test_gate_fails_on_injected_regression():
+    """Acceptance: a synthetic 50% drop on a tracked row is flagged."""
+    base = _doc(**{"0.01": 4.0, "0.05": 2.4})
+    fresh = _doc(**{"0.01": 2.0, "0.05": 2.3})     # 0.01 halved
+    report = compare.compare({"kernels": [fresh]}, {"kernels": base},
+                             TRACKED, tolerance=0.20)
+    assert len(report["regressions"]) == 1
+    reg = report["regressions"][0]
+    assert reg["path"].endswith("0.01/speedup_x")
+    assert reg["ratio"] == pytest.approx(0.5)
+    ok = [r for r in report["rows"] if not r["regressed"]]
+    assert len(ok) == 1                            # 0.05 within tolerance
+
+
+def test_min_of_k_guard_forgives_one_noisy_repeat():
+    """One throttled repeat must NOT fake a regression: the gate takes the
+    best value across repeats."""
+    base = _doc(**{"0.01": 4.0, "0.05": 2.4})
+    noisy = _doc(**{"0.01": 1.1, "0.05": 0.9})     # contention burst
+    good = _doc(**{"0.01": 3.9, "0.05": 2.5})
+    report = compare.compare({"kernels": [noisy, good]}, {"kernels": base},
+                             TRACKED, tolerance=0.20)
+    assert report["regressions"] == []
+    row = report["rows"][0]
+    assert row["best"] == pytest.approx(3.9)
+    assert row["n_repeats"] == 2
+
+
+def test_direction_lower_gates_on_increase():
+    base = {"result": {"lat_ms": 10.0}}
+    fresh = {"result": {"lat_ms": 15.0}}
+    tracked = [{"suite": "kernels", "path": "result/lat_ms",
+                "direction": "lower"}]
+    report = compare.compare({"kernels": [fresh]}, {"kernels": base},
+                             tracked, tolerance=0.20)
+    assert len(report["regressions"]) == 1
+    assert report["rows"][0]["ratio"] == pytest.approx(10.0 / 15.0)
+
+
+def test_improvements_and_missing_rows_do_not_gate():
+    base = _doc(**{"0.01": 4.0})                   # no 0.05 row in baseline
+    fresh = _doc(**{"0.01": 9.0, "0.05": 2.0})
+    report = compare.compare({"kernels": [fresh]}, {"kernels": base},
+                             TRACKED, tolerance=0.20)
+    assert report["regressions"] == []
+    assert len(report["missing"]) == 1
+
+
+def test_per_row_tolerance_override():
+    base = _doc(**{"0.01": 4.0, "0.05": 2.4})
+    fresh = _doc(**{"0.01": 3.5, "0.05": 2.4})     # 12.5% drop
+    tight = copy.deepcopy(TRACKED)
+    tight[0]["tolerance"] = 0.05
+    report = compare.compare({"kernels": [fresh]}, {"kernels": base},
+                             tight, tolerance=0.20)
+    assert len(report["regressions"]) == 1
+
+
+def _write_run(dirpath, doc):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, "BENCH_kernels.json"), "w") as f:
+        json.dump(doc, f)
+
+
+def test_cli_gate_exit_codes(tmp_path):
+    """End-to-end through main(): clean run exits 0, regressed run exits 1
+    with --gate (0 without), and the JSON report is written."""
+    baselines = tmp_path / "baselines"
+    baselines.mkdir()
+    with open(baselines / "tracked.json", "w") as f:
+        json.dump({"tracked": TRACKED}, f)
+    _write_run(baselines, _doc(**{"0.01": 4.0, "0.05": 2.4}))
+
+    fresh = tmp_path / "fresh"
+    _write_run(fresh / "r0", _doc(**{"0.01": 4.1, "0.05": 2.3}))
+    _write_run(fresh / "r1", _doc(**{"0.01": 3.8, "0.05": 2.5}))
+    argv = [str(fresh), "--baselines", str(baselines)]
+    assert compare.main(argv + ["--gate"]) == 0
+
+    _write_run(fresh / "r0", _doc(**{"0.01": 1.0, "0.05": 2.4}))
+    _write_run(fresh / "r1", _doc(**{"0.01": 1.2, "0.05": 2.4}))
+    report_path = tmp_path / "diff.json"
+    assert compare.main(argv) == 0                 # report-only: no gate
+    assert compare.main(argv + ["--gate", "--json",
+                                str(report_path)]) == 1
+    report = json.loads(report_path.read_text())
+    assert len(report["regressions"]) == 1
+
+
+def test_cli_update_baselines_takes_best_across_repeats(tmp_path):
+    baselines = tmp_path / "baselines"
+    baselines.mkdir()
+    with open(baselines / "tracked.json", "w") as f:
+        json.dump({"tracked": TRACKED}, f)
+    fresh = tmp_path / "fresh"
+    _write_run(fresh / "r0", _doc(**{"0.01": 3.0, "0.05": 2.0}))
+    _write_run(fresh / "r1", _doc(**{"0.01": 4.5, "0.05": 1.8}))
+    assert compare.main([str(fresh), "--baselines", str(baselines),
+                         "--update-baselines"]) == 0
+    doc = json.loads((baselines / "BENCH_kernels.json").read_text())
+    rows = doc["result"]["spikemm_sparsity"]["rows"]
+    assert rows["0.01"]["speedup_x"] == 4.5        # best, not r0's value
+    assert rows["0.05"]["speedup_x"] == 2.0
+    # the refreshed baseline now gates cleanly against the same run
+    assert compare.main([str(fresh), "--baselines", str(baselines),
+                         "--gate"]) == 0

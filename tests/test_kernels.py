@@ -240,3 +240,98 @@ def test_stdp_kernel_through_plasticity_step():
     tr2, w2 = stdp_step(cfg, tr, w, s_pre, s_post, use_kernel=True)
     np.testing.assert_allclose(np.asarray(w1), np.asarray(w2),
                                rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# spikemm block-sparse channel
+# ---------------------------------------------------------------------------
+
+
+def _sparse_blocks(M, K, N):
+    from repro.kernels.spikemm.ops import resolve_block_shape
+    blocks = resolve_block_shape(M, K)
+    blocks["bn"] = min(512, max(128, N))
+    return blocks
+
+
+def _density_rasters(M, K):
+    """The extremes the sparse channel must survive: all-empty, a single
+    occupied block, low-density packed, and fully dense."""
+    k = jax.random.PRNGKey(M * 7 + K)
+    return {
+        "all_empty": jnp.zeros((M, K), jnp.float32),
+        "single_block": jnp.zeros((M, K), jnp.float32).at[1, 2].set(1.0),
+        "packed_2pct": jnp.zeros((M, K), jnp.float32).at[
+            :max(1, M // 8), :max(1, K // 8)].set(
+            (jax.random.uniform(k, (max(1, M // 8), max(1, K // 8))) < 0.5
+             ).astype(jnp.float32)),
+        "dense": (jax.random.uniform(k, (M, K)) < 0.5).astype(jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("M,K,N", [(256, 1024, 256), (100, 300, 200),
+                                   (130, 700, 64)])
+def test_spikemm_sparse_channel_matches_ref(M, K, N):
+    """Both sparse implementations == dense oracle at density extremes,
+    including shapes not divisible by the block sizes."""
+    from repro.kernels.spikemm.ops import (_sparse_pallas_impl,
+                                           _sparse_ref_impl)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    blocks = _sparse_blocks(M, K, N)
+    for label, s in _density_rasters(M, K).items():
+        ref = spikemm_ref(s, w)
+        out_ref = _sparse_ref_impl(s, w, blocks=blocks)
+        out_pal = _sparse_pallas_impl(s, w, blocks=blocks, interpret=True)
+        np.testing.assert_allclose(np.asarray(out_ref), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4, err_msg=label)
+        np.testing.assert_allclose(np.asarray(out_pal), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4, err_msg=label)
+
+
+def test_spikemm_sparse_channel_under_jit(monkeypatch):
+    """Forced sparse under jit exercises the capacity-padded compaction
+    (data-dependent count -> static Mb*Kb list with inactive padding)."""
+    monkeypatch.setenv("REPRO_SPIKEMM_SPARSE", "always")
+    k = jax.random.PRNGKey(2)
+    s = (jax.random.uniform(k, (256, 512)) < 0.05).astype(jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (512, 128), jnp.float32)
+    out = jax.jit(spikemm)(s, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(spikemm_ref(s, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_spikemm_sparse_grad_matches_dense(monkeypatch):
+    """Grad parity: the custom VJP's dW pass re-dispatches spikemm, so the
+    sparse channel must be exact under differentiation too."""
+    k = jax.random.PRNGKey(3)
+    s = (jax.random.uniform(k, (256, 512)) < 0.08).astype(jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (512, 128), jnp.float32)
+
+    def loss(w):
+        return jnp.sum(spikemm(s, w) ** 2)
+
+    monkeypatch.setenv("REPRO_SPIKEMM_SPARSE", "always")
+    g_sparse = jax.grad(loss)(w)
+    monkeypatch.setenv("REPRO_SPIKEMM_SPARSE", "never")
+    g_dense = jax.grad(loss)(w)
+    np.testing.assert_allclose(np.asarray(g_sparse), np.asarray(g_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_occupancy_fraction_consistent_with_block_occupancy():
+    """Regression (ISSUE 6 bugfix): the default-argument fraction must use
+    the block shape dispatch actually resolves, not a fixed bk=512 — for
+    K=300 the kernel pads to bk=384, and the reported fraction has to
+    match what is actually skipped."""
+    from repro.kernels.spikemm.ops import block_occupancy as bo
+    from repro.kernels.spikemm.ops import resolve_block_shape
+    from repro.kernels.common import pad_axis
+    k = jax.random.PRNGKey(4)
+    for M, K in [(100, 300), (130, 700), (256, 2048)]:
+        s = (jax.random.uniform(k, (M, K)) < 0.02).astype(jnp.float32)
+        blocks = resolve_block_shape(M, K)
+        s_p, _ = pad_axis(s, 0, blocks["bm"])
+        s_p, _ = pad_axis(s_p, 1, blocks["bk"])
+        expect = float(jnp.mean(bo(s_p, blocks["bm"], blocks["bk"]
+                                   ).astype(jnp.float32)))
+        assert float(occupancy_fraction(s)) == expect, (M, K, blocks)

@@ -487,3 +487,40 @@ def test_plan_runs_under_jit():
 
     _, o_ref, _ = events.run(nodes, params, x)
     np.testing.assert_allclose(f(params, x), o_ref, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 3), st.floats(0.3, 0.95), st.booleans(),
+       st.floats(0.02, 0.6))
+def test_plan_outputs_identical_under_sparse_dispatch(variant, tau,
+                                                      recurrent, rate):
+    """Property: pinning the spikemm channel (never vs always) must not
+    change ANY plan output bit — the block-sparse path only skips blocks
+    that are exactly zero, so eager plan.run is bit-identical either way
+    on arbitrary random programs and input densities."""
+    import os
+
+    neuron = ProgramNeuron(prog=_random_program(variant, tau, 0.8, 0.5,
+                                                True))
+    inputs = ("input", "self") if recurrent else ("input",)
+    nodes = [events.LayerNode("h", neuron, ff_integrate, inputs, 12),
+             events.LayerNode("ro", LI(tau=0.9), ff_integrate, ("h",), 4)]
+    ks = jax.random.split(jax.random.PRNGKey(variant + int(rate * 991)), 3)
+    params = {"h": {"w_input": _w(ks[0], 6, 12)},
+              "ro": {"w_h": _w(ks[1], 12, 4)}}
+    if recurrent:
+        params["h"]["w_self"] = _w(ks[2], 12, 12, scale=0.3)
+    x = _spikes(jax.random.fold_in(KEY, variant), (11, 2, 6), rate=rate)
+    env, prev = "REPRO_SPIKEMM_SPARSE", os.environ.get("REPRO_SPIKEMM_SPARSE")
+    try:
+        os.environ[env] = "never"
+        _, o1, r1 = plan.run(nodes, params, x, record=("h",))
+        os.environ[env] = "always"
+        _, o2, r2 = plan.run(nodes, params, x, record=("h",))
+    finally:
+        if prev is None:
+            os.environ.pop(env, None)
+        else:
+            os.environ[env] = prev
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    np.testing.assert_array_equal(np.asarray(r1["h"]), np.asarray(r2["h"]))

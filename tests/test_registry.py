@@ -1,6 +1,7 @@
 """Kernel-registry tests: parity harness over every registered kernel,
 block resolution, dispatch policy, and the tuning-cache round trip."""
 
+import dataclasses
 import json
 import os
 
@@ -257,3 +258,92 @@ def test_tuned_blocks_still_produce_correct_results(tmp_path, monkeypatch):
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_ref),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# implementation channels (block-sparse spikemm dispatch policy)
+# ---------------------------------------------------------------------------
+
+
+def _channel_rasters():
+    k = jax.random.PRNGKey(11)
+    M, K = 512, 1024
+    sparse = jnp.zeros((M, K), jnp.float32).at[:64, :128].set(1.0)
+    dense = (jax.random.uniform(k, (M, K)) < 0.5).astype(jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (K, 64), jnp.float32)
+    return sparse, dense, w
+
+
+def test_spikemm_channel_env_policy(monkeypatch):
+    """never/auto/always routing, tracer conservatism, invalid value."""
+    from repro.kernels.spikemm import ops
+    sparse, dense, w = _channel_rasters()
+    spec = registry.get("spikemm")
+    blocks = spec.resolve_blocks(spec.dims_of(sparse, w))
+
+    monkeypatch.setenv("REPRO_SPIKEMM_SPARSE", "never")
+    assert ops._select_channel(sparse, w, blocks=blocks) is None
+    monkeypatch.setenv("REPRO_SPIKEMM_SPARSE", "always")
+    assert ops._select_channel(dense, w, blocks=blocks) == "sparse"
+    monkeypatch.delenv("REPRO_SPIKEMM_SPARSE")
+    assert ops._select_channel(sparse, w, blocks=blocks) == "sparse"
+    assert ops._select_channel(dense, w, blocks=blocks) is None
+
+    # abstract raster (under jit): occupancy unknowable -> dense
+    seen = []
+
+    def probe(s):
+        seen.append(ops._select_channel(s, w, blocks=blocks))
+        return s
+
+    jax.jit(probe)(sparse)
+    assert seen == [None]
+
+    monkeypatch.setenv("REPRO_SPIKEMM_SPARSE", "bogus")
+    with pytest.raises(ValueError, match="REPRO_SPIKEMM_SPARSE"):
+        ops._select_channel(sparse, w, blocks=blocks)
+
+
+def test_spikemm_auto_threshold_from_tuning_cache(tmp_path, monkeypatch):
+    """The auto policy honors a tuned per-(backend, bucket) threshold: a
+    zero threshold pins even a near-empty raster to the dense channel."""
+    from repro.kernels.spikemm import ops
+    sparse, _, w = _channel_rasters()
+    spec = registry.get("spikemm")
+    blocks = spec.resolve_blocks(spec.dims_of(sparse, w))
+    dims = spec.dims_of(sparse, w)
+    monkeypatch.delenv("REPRO_SPIKEMM_SPARSE", raising=False)
+    # fresh cache path per scenario: the default-cache singleton caches
+    # its first load of a given path
+    for permille, expect in ((0, None), (1000, "sparse")):
+        path = str(tmp_path / f"cache_{permille}.json")
+        monkeypatch.setenv("REPRO_TUNING_CACHE", path)
+        cache = tuning.TuningCache(path)
+        cache.put("spikemm.sparse_th", jax.default_backend(),
+                  tuning.shape_bucket(dims), {"permille": permille})
+        cache.save()
+        assert ops.sparse_threshold(dims) == permille / 1000.0
+        assert ops._select_channel(sparse, w, blocks=blocks) == expect
+
+
+def test_dispatch_routes_through_selected_channel(monkeypatch):
+    """dispatch() must hand the call to the channel pair the router picks
+    (observed via a wrapped spec), and fall through when it returns None."""
+    from repro.kernels.spikemm import ops
+    sparse, _, w = _channel_rasters()
+    calls = []
+    spec = registry.get("spikemm")
+    wrapped = dataclasses.replace(
+        spec,
+        ref=lambda *a, **kw: calls.append("dense") or spec.ref(*a, **kw),
+        channels={"sparse": registry.Channel(
+            ref=lambda *a, **kw: calls.append("sparse")
+            or spec.channels["sparse"].ref(*a, **kw),
+            pallas=spec.channels["sparse"].pallas)})
+    monkeypatch.setitem(registry._REGISTRY, "spikemm", wrapped)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "ref")
+    monkeypatch.setenv("REPRO_SPIKEMM_SPARSE", "always")
+    registry.dispatch("spikemm", (sparse, w))
+    monkeypatch.setenv("REPRO_SPIKEMM_SPARSE", "never")
+    registry.dispatch("spikemm", (sparse, w))
+    assert calls == ["sparse", "dense"]
