@@ -74,11 +74,19 @@ def repeat_dirs(fresh_dir: str) -> List[str]:
 
 
 def load_suite(run_dir: str, suite: str) -> Optional[Dict]:
+    """Load one BENCH_<suite>.json; missing OR corrupt files degrade to
+    None (a warning + a "missing" row in the report) instead of killing
+    the gate — a truncated artifact from a preempted nightly runner must
+    not mask the rows that did land."""
     path = os.path.join(run_dir, f"BENCH_{suite}.json")
     if not os.path.exists(path):
         return None
-    with open(path) as f:
-        return json.load(f)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"warning: unreadable bench file {path}: {e}")
+        return None
 
 
 def compare(fresh_runs: Dict[str, List[Dict]], baselines: Dict[str, Dict],
@@ -232,8 +240,13 @@ def main(argv=None) -> int:
         with open(os.environ["GITHUB_STEP_SUMMARY"], "a") as f:
             f.write(f"## Perf gate\n\n{table}\n{verdict}\n")
     if report["missing"]:
+        stale = [m for m in report["missing"] if not m["have_baseline"]]
         print(f"warning: {len(report['missing'])} tracked row(s) missing "
               f"from this run (not gated)")
+        if stale:
+            print(f"  {len(stale)} of them have no checked-in baseline — "
+                  f"run with --update-baselines after a healthy bench run "
+                  f"and commit the result")
     return 1 if (args.gate and n_reg) else 0
 
 

@@ -31,6 +31,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults
 from repro.core.neuron import NeuronSpec
 
 Array = jax.Array
@@ -224,6 +225,10 @@ def step(nodes: List[LayerNode], params: Dict[str, Any], state: Dict[str, Any],
             {k: v for k, v in state[n.name].items()
              if k not in ("out", "ring") and not k.startswith("syn:")},
             current, params.get(n.name, {}).get("neuron"))      # FIRE
+        # injected dead/stuck neuron rows (repro.core.faults): the faulty
+        # rows poison everything downstream of the emission — recurrence,
+        # rings, same-timestep feeds — exactly like a dead core would
+        s_out = faults.perturb_output(n.name, s_out)
         ns = dict(ns)
         ns["out"] = s_out
         if "ring" in state[n.name]:

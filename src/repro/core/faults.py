@@ -1,0 +1,287 @@
+"""Deterministic, seedable fault injection for the execution runtime.
+
+Neuromorphic deployments are fault-prone by design: spike packets drop on
+the NoC, cores die and leave their neuron rows silent (or stuck firing),
+weight SRAM takes bit-flips. A runtime that claims to serve always-on
+streaming workloads has to stay correct-enough — and above all *defined* —
+under those faults, so this module makes them injectable on demand:
+
+  data faults (applied inside the engines, jit-safe, fully deterministic)
+    drop_blocks   packet loss: whole (bt x bn) tiles of the input raster
+                  zeroed.            p=<frac>, bt=8, bn=128, seed=<int>
+    dead_rows     dead/stuck neuron rows at node outputs.
+                  frac=<frac>, mode=dead|stuck, node=<name or *>, seed
+    bitflip       weight-plane sign flips on "w_*" params.
+                  frac=<frac>, seed
+    nan_weights   weight-plane NaN poisoning on "w_*" params.
+                  frac=<frac>, seed
+
+  infrastructure faults (applied at dispatch / tuning time)
+    compile_fail  forces the Pallas stage of kernel dispatch to raise
+                  `FaultInjectedError`, exercising the registry fallback
+                  chain.  kernels=<name|name2|...| * >, p=<frac>, seed,
+                  autotune=1 to also fail autotuner candidate probes
+    vmem_limit    simulated VMEM pressure: the effective budget becomes
+                  min(REPRO_VMEM_LIMIT_MB, mb).     mb=<float>
+
+Faults are specified as `kind:key=val,key=val` clauses joined with ";",
+either in the `REPRO_FAULTS` env var or pushed with the `inject()` context
+manager (which *replaces* the env spec while active, so tests are
+deterministic under a chaos-CI environment). All randomness derives from
+`jax.random.PRNGKey(seed)` folded with a crc32 site label: the same spec
+produces bit-identical masks eagerly and under jit, across processes, and
+the masks for node outputs depend only on the neuron axis — so the fused
+plan engine and the per-step stepper see *exactly* the same fault.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_ENV = "REPRO_FAULTS"
+
+KINDS = ("drop_blocks", "dead_rows", "bitflip", "nan_weights",
+         "compile_fail", "vmem_limit")
+
+
+class FaultInjectedError(RuntimeError):
+    """The exception injected infrastructure faults raise."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    kind: str
+    params: Tuple[Tuple[str, str], ...] = ()
+
+    def get(self, key: str, default: Any = None) -> Any:
+        for k, v in self.params:
+            if k == key:
+                return v
+        return default
+
+    def getf(self, key: str, default: float) -> float:
+        return float(self.get(key, default))
+
+    def geti(self, key: str, default: int) -> int:
+        return int(float(self.get(key, default)))
+
+
+def parse(spec: str) -> Tuple[Fault, ...]:
+    """Parse a REPRO_FAULTS spec string into Fault clauses."""
+    out: List[Fault] = []
+    for clause in spec.split(";"):
+        clause = clause.strip()
+        if not clause:
+            continue
+        kind, _, rest = clause.partition(":")
+        kind = kind.strip()
+        if kind not in KINDS:
+            raise ValueError(f"unknown fault kind {kind!r} in {_ENV} "
+                             f"(known: {', '.join(KINDS)})")
+        params = []
+        for kv in rest.split(","):
+            kv = kv.strip()
+            if not kv:
+                continue
+            k, sep, v = kv.partition("=")
+            if not sep:
+                raise ValueError(f"fault param {kv!r} is not key=value "
+                                 f"(clause {clause!r})")
+            params.append((k.strip(), v.strip()))
+        out.append(Fault(kind, tuple(params)))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# active-fault resolution: context stack overrides env
+# ---------------------------------------------------------------------------
+
+_STACK: List[Tuple[Fault, ...]] = []
+_ENV_CACHE: Tuple[str, Tuple[Fault, ...]] = ("", ())
+
+
+def active() -> Tuple[Fault, ...]:
+    """The faults in effect: innermost `inject()` context, else REPRO_FAULTS."""
+    if _STACK:
+        return _STACK[-1]
+    global _ENV_CACHE
+    spec = os.environ.get(_ENV, "")
+    if spec != _ENV_CACHE[0]:
+        _ENV_CACHE = (spec, parse(spec) if spec else ())
+    return _ENV_CACHE[1]
+
+
+@contextlib.contextmanager
+def inject(spec: str = ""):
+    """Install a fault spec for the dynamic extent of the with-block.
+
+    The spec *replaces* whatever REPRO_FAULTS / outer contexts carry
+    (inject("") therefore disables all faults), keeping tests
+    deterministic under a chaos-CI environment.
+    """
+    _STACK.append(parse(spec) if spec else ())
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def _select(kind: str) -> Tuple[Fault, ...]:
+    return tuple(f for f in active() if f.kind == kind)
+
+
+def _site_key(seed: int, site: str) -> jax.Array:
+    """Deterministic PRNG key for a (seed, site) pair; crc32 keeps the site
+    hash stable across processes (Python's hash() is salted)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed),
+                              zlib.crc32(site.encode()) & 0x7FFFFFFF)
+
+
+def _hits(name: str, patterns: str) -> bool:
+    pats = [p for p in patterns.split("|") if p]
+    return "*" in pats or name in pats
+
+
+# ---------------------------------------------------------------------------
+# data faults
+# ---------------------------------------------------------------------------
+
+
+def perturb_input(x: jax.Array) -> jax.Array:
+    """Apply `drop_blocks` packet loss to the (T, B, N) input raster.
+
+    Whole (bt x bn) time-by-neuron tiles are zeroed across the batch —
+    the software image of spike packets lost in transit. Identity when no
+    drop_blocks fault is active.
+    """
+    for f in _select("drop_blocks"):
+        p = f.getf("p", 0.05)
+        bt, bn = f.geti("bt", 8), f.geti("bn", 128)
+        seed = f.geti("seed", 0)
+        T, N = x.shape[0], x.shape[-1]
+        gt, gn = -(-T // bt), -(-N // bn)
+        key = _site_key(seed, f"drop_blocks:{T}x{N}")
+        keep = (jax.random.uniform(key, (gt, gn)) >= p)
+        mask = jnp.repeat(jnp.repeat(keep, bt, 0)[:T], bn, 1)[:, :N]
+        shape = (T,) + (1,) * (x.ndim - 2) + (N,)
+        x = x * mask.reshape(shape).astype(x.dtype)
+    return x
+
+
+def perturb_output(node: str, out: jax.Array) -> jax.Array:
+    """Apply `dead_rows` (dead / stuck-at-1 neuron rows) to a node output.
+
+    The mask depends only on (seed, node, N) — never on time — so
+    applying it per-step in the stepper and once on the full (T, B, N)
+    tensor in the fused engine yields bit-identical results.
+    """
+    for f in _select("dead_rows"):
+        if not _hits(node, str(f.get("node", "*"))):
+            continue
+        frac = f.getf("frac", 0.05)
+        mode = str(f.get("mode", "dead"))
+        seed = f.geti("seed", 0)
+        N = out.shape[-1]
+        key = _site_key(seed, f"dead_rows:{node}:{N}")
+        hit = jax.random.uniform(key, (N,)) < frac
+        if mode == "stuck":
+            out = jnp.where(hit, jnp.ones((), out.dtype), out)
+        else:
+            out = out * (~hit).astype(out.dtype)
+    return out
+
+
+def _poison_plane(w: jax.Array, site: str, frac: float, seed: int,
+                  nan: bool) -> jax.Array:
+    if not jnp.issubdtype(w.dtype, jnp.floating):
+        return w
+    key = _site_key(seed, site)
+    hit = jax.random.uniform(key, w.shape) < frac
+    if nan:
+        return jnp.where(hit, jnp.asarray(jnp.nan, w.dtype), w)
+    return jnp.where(hit, -w, w)          # sign bit-flip
+
+
+def perturb_params(params: Dict[str, Any]) -> Dict[str, Any]:
+    """Apply `bitflip` / `nan_weights` poisoning to every "w_*" weight
+    plane in a two-level SNN params dict. Identity when inactive."""
+    flips = _select("bitflip")
+    nans = _select("nan_weights")
+    if not flips and not nans:
+        return params
+    out = dict(params)
+    for node, sub in params.items():
+        if not isinstance(sub, dict):
+            continue
+        new = dict(sub)
+        for k, v in sub.items():
+            if not k.startswith("w_") or not hasattr(v, "dtype"):
+                continue
+            for f in flips:
+                new[k] = _poison_plane(new[k], f"bitflip:{node}/{k}",
+                                       f.getf("frac", 1e-3),
+                                       f.geti("seed", 0), nan=False)
+            for f in nans:
+                new[k] = _poison_plane(new[k], f"nan:{node}/{k}",
+                                       f.getf("frac", 1e-3),
+                                       f.geti("seed", 0), nan=True)
+        out[node] = new
+    return out
+
+
+# ---------------------------------------------------------------------------
+# infrastructure faults
+# ---------------------------------------------------------------------------
+
+
+def _fails(f: Fault, kernel: str) -> bool:
+    if not _hits(kernel, str(f.get("kernels", "*"))):
+        return False
+    p = f.getf("p", 1.0)
+    if p >= 1.0:
+        return True
+    seed = f.geti("seed", 0)
+    # deterministic per (kernel, seed): the same kernels fail all run long
+    return (zlib.crc32(f"{kernel}:{seed}".encode()) % 10000) < p * 10000
+
+
+def maybe_fail_compile(kernel: str, autotune: bool = False) -> None:
+    """Raise `FaultInjectedError` when a compile_fail fault targets
+    `kernel`. Dispatch calls this at the top of its Pallas stage(s);
+    the autotuner opts in per-candidate only for specs with autotune=1."""
+    for f in _select("compile_fail"):
+        if autotune and str(f.get("autotune", "0")) != "1":
+            continue
+        if _fails(f, kernel):
+            raise FaultInjectedError(
+                f"injected kernel compile failure for {kernel!r}")
+
+
+def vmem_limit_override_bytes() -> Optional[int]:
+    """Simulated VMEM pressure: the smallest injected `vmem_limit` budget
+    in bytes, or None when the fault is inactive. The effective budget is
+    min(env limit, this) — pressure only ever shrinks the budget."""
+    faults = _select("vmem_limit")
+    if not faults:
+        return None
+    return int(min(f.getf("mb", 1.0) for f in faults) * 2 ** 20)
+
+
+def describe(faults: Optional[Sequence[Fault]] = None) -> str:
+    fs = active() if faults is None else tuple(faults)
+    return "; ".join(
+        f.kind + (":" + ",".join(f"{k}={v}" for k, v in f.params)
+                  if f.params else "")
+        for f in fs) or "(none)"
+
+
+__all__ = ["Fault", "FaultInjectedError", "KINDS", "active", "describe",
+           "inject", "maybe_fail_compile", "parse", "perturb_input",
+           "perturb_output", "perturb_params", "vmem_limit_override_bytes"]

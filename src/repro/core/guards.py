@@ -1,0 +1,158 @@
+"""Numerical guardrails for `plan.run`: finite checks, spike-rate
+monitors, and chunked-online divergence detection.
+
+An always-on streaming SNN fails in characteristic ways: a NaN sneaks into
+a weight plane and silently poisons every window after it; a mis-tuned
+threshold drives a population silent (rate 0) or saturated (rate ~1); an
+unstable plasticity rule blows the learned weights up over a few windows.
+Guards make those states *observable and survivable* instead of silent:
+
+  policy (REPRO_GUARD env or `plan.run(guard=...)`):
+    off       no checks, zero inserted ops (the default)
+    warn      violations emit a warning and a "guard" incident on the
+              per-process log (`repro.kernels.incidents()`)
+    raise     violations raise `GuardViolation` when the value is
+              concrete; under jit tracing this degrades to `warn` via a
+              host callback (a traced value cannot abort the computation
+              — run eagerly or use checkify semantics for hard aborts)
+    sanitize  violations are repaired in-graph (jit-safe, deterministic):
+              nonfinite activations become 0, a diverged learned-weight
+              window rolls back to its entry tensor
+
+  checks:
+    check_tensor   nonfinite values in activations / carried state
+    check_spikes   population silence (mean rate <= rate_silence) and
+                   saturation (mean rate >= rate_saturation)
+    guard_learned  chunked-online divergence: nonfinite learned entries
+                   fall back elementwise, and a weight-norm explosion
+                   (||w1|| > w_ratio_max * (||w0|| + 1)) rolls the whole
+                   window's learned tensor back to the entry weights
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import warnings
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+# import the submodule directly: the `repro.kernels` package re-exports an
+# `incidents()` *function* that shadows the module attribute of the same name
+from repro.kernels.incidents import FallbackEvent, record as _record_incident
+
+_ENV = "REPRO_GUARD"
+POLICIES = ("off", "warn", "raise", "sanitize")
+
+
+class GuardViolation(RuntimeError):
+    """Raised by policy="raise" on a concrete guard violation."""
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    policy: str = "off"
+    finite: bool = True              # nonfinite activation/state check
+    rate_silence: float = 0.0        # mean spike rate <= this => silent
+    rate_saturation: float = 0.98    # mean spike rate >= this => saturated
+    w_ratio_max: float = 16.0        # learned-vs-entry weight norm blowup
+
+    @property
+    def active(self) -> bool:
+        return self.policy != "off"
+
+
+def config(policy: Union[None, str, GuardConfig] = None) -> GuardConfig:
+    """Resolve a guard policy: explicit arg > REPRO_GUARD env > off."""
+    if isinstance(policy, GuardConfig):
+        return policy
+    if policy is None:
+        policy = os.environ.get(_ENV, "off")
+    if policy not in POLICIES:
+        raise ValueError(f"{_ENV}={policy!r}: expected one of "
+                         f"{', '.join(POLICIES)}")
+    return GuardConfig(policy=policy)
+
+
+def _notify(tag: str, msg: str, policy: str) -> None:
+    """Host-side violation handler (concrete values and jit callbacks)."""
+    _record_incident(FallbackEvent(
+        kind="guard", family=tag, stage=policy, error=msg))
+    if policy == "raise":
+        raise GuardViolation(f"[REPRO_GUARD] {tag}: {msg}")
+    warnings.warn(f"[REPRO_GUARD] {tag}: {msg}", RuntimeWarning,
+                  stacklevel=3)
+
+
+def _host_flag(bad, *, tag: str, msg: str, policy: str) -> None:
+    if bool(bad):
+        # inside jit a raise cannot abort the traced computation; degrade
+        # to warn so the violation is still observable on the incident log
+        _notify(tag, msg, "warn" if policy == "raise" else policy)
+
+
+def _flag(tag: str, bad: jax.Array, msg: str, cfg: GuardConfig) -> None:
+    """Act on a scalar bool violation flag, traced or concrete."""
+    if isinstance(bad, jax.core.Tracer):
+        jax.debug.callback(functools.partial(_host_flag, tag=tag, msg=msg,
+                                             policy=cfg.policy), bad)
+    elif bool(bad):
+        _notify(tag, msg, cfg.policy)
+
+
+def check_tensor(tag: str, x: jax.Array, cfg: GuardConfig) -> jax.Array:
+    """Finite check on one activation/state tensor. Returns x, sanitized
+    (nonfinite -> 0) under policy="sanitize"."""
+    if not cfg.active or not cfg.finite:
+        return x
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return x                       # integer spikes cannot be nonfinite
+    finite = jnp.isfinite(x)
+    if cfg.policy == "sanitize":
+        return jnp.where(finite, x, jnp.zeros((), x.dtype))
+    _flag(tag, ~finite.all(), "nonfinite values detected", cfg)
+    return x
+
+
+def check_spikes(tag: str, spikes: jax.Array, cfg: GuardConfig) -> None:
+    """Silence / saturation monitor on an emitted spike train."""
+    if not cfg.active or cfg.policy == "sanitize":
+        return                         # rates are a symptom, not repairable
+    rate = jnp.mean(spikes.astype(jnp.float32))
+    _flag(tag, rate <= cfg.rate_silence,
+          f"population silent (mean rate <= {cfg.rate_silence})", cfg)
+    _flag(tag, rate >= cfg.rate_saturation,
+          f"population saturated (mean rate >= {cfg.rate_saturation})", cfg)
+
+
+def guard_learned(tag: str, w0: jax.Array, w1: jax.Array,
+                  cfg: GuardConfig) -> jax.Array:
+    """Chunked-online divergence guard on one window's learned weights.
+
+    w0 is the window's entry tensor, w1 the learned result. Under
+    "sanitize", nonfinite entries fall back elementwise — to the entry
+    value, or to 0 where the entry itself is already poisoned — and a
+    norm explosion rolls the whole window back (jit-safe selects);
+    otherwise violations warn/raise and w1 passes through.
+    """
+    if not cfg.active:
+        return w1
+    finite = jnp.isfinite(w1)
+    n0 = jnp.linalg.norm(w0.astype(jnp.float32))
+    n1 = jnp.linalg.norm(jnp.where(finite, w1, 0).astype(jnp.float32))
+    exploded = n1 > cfg.w_ratio_max * (n0 + 1.0)
+    if cfg.policy == "sanitize":
+        safe0 = jnp.where(jnp.isfinite(w0), w0, jnp.zeros((), w0.dtype))
+        w1 = jnp.where(finite, w1, safe0)
+        return jnp.where(exploded, safe0, w1)
+    _flag(tag, ~finite.all(), "nonfinite learned weights", cfg)
+    _flag(tag, exploded,
+          f"learned-weight norm explosion (> {cfg.w_ratio_max}x entry)", cfg)
+    return w1
+
+
+__all__ = ["GuardConfig", "GuardViolation", "POLICIES", "config",
+           "check_tensor", "check_spikes", "guard_learned"]

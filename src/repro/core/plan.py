@@ -67,19 +67,22 @@ runs; fusable ones run fast.
 Env knobs: REPRO_SNN_ENGINE = plan | stepper | auto (auto = plan; set
 `stepper` to force the interpreted engine, e.g. when bisecting a numerics
 difference). REPRO_SNN_EXPLAIN=1 prints every compiled segment schedule
-(`Plan.describe()`) as Programs are lowered.
+(`Plan.describe()`) as Programs are lowered. REPRO_FAULTS injects
+deterministic faults at the run boundary and node outputs
+(`core/faults.py`); REPRO_GUARD (or `run(guard=...)`) arms the numerical
+guardrails (`core/guards.py`).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import events, plasticity
+from repro.core import events, faults, guards, plasticity
 from repro.core.neuron import Decay, NeuronProgram
 from repro.kernels.alifrec.ops import alif_scan, alifrec_scan
 from repro.kernels.lif.ops import lif_scan
@@ -417,10 +420,21 @@ def _self_weight(node: events.LayerNode, params: Dict[str, Any]) -> Array:
     return params[node.name][conn.weight_key]
 
 
+def _is_spiking(node: events.LayerNode) -> bool:
+    """Whether the node emits a spike train (rate monitors make sense) as
+    opposed to a membrane/state readout. Unknown programs count as spiking
+    only if they declare a threshold."""
+    try:
+        return node.neuron.program.threshold is not None
+    except NotImplementedError:
+        return False
+
+
 def _run_fused(node: events.LayerNode, kind: str, lower: str,
                params: Dict[str, Any], outs: Dict[str, Array],
                state: Dict[str, Any], new_state: Dict[str, Any],
-               T: int, B: int) -> None:
+               T: int, B: int,
+               gcfg: guards.GuardConfig = guards.GuardConfig()) -> None:
     cur = _hoisted_current(node, params, outs, state, T, B)
     prog = node.neuron.program
     nparams = params.get(node.name, {}).get("neuron")
@@ -481,6 +495,18 @@ def _run_fused(node: events.LayerNode, kind: str, lower: str,
     else:  # pragma: no cover - compile_program only emits known families
         raise ValueError(f"unknown FIRE lowering {lower!r}")
 
+    # dead/stuck-row faults: the mask is time-independent, so masking the
+    # full (T, B, N) train here equals the stepper's per-step masking for
+    # everything downstream (feeds, rings, "out"). A fused *recurrent*
+    # kernel's in-loop feedback runs pre-mask, unlike the stepper — use
+    # feed-forward topologies (or the stepper engine) when exact
+    # cross-engine equivalence under dead_rows matters.
+    out = faults.perturb_output(node.name, out)
+    out = guards.check_tensor(f"{node.name}.out", out, gcfg)
+    if lower != LOWER_LI:
+        guards.check_spikes(node.name, out, gcfg)
+    ns = {k: guards.check_tensor(f"{node.name}.{k}", v, gcfg)
+          for k, v in ns.items()}
     outs[node.name] = out
     ns["out"] = out[-1]
     if "ring" in state[node.name]:
@@ -494,7 +520,8 @@ def _run_fused(node: events.LayerNode, kind: str, lower: str,
 def _run_fallback(seg: Segment, nodes_by_name: Dict[str, events.LayerNode],
                   params: Dict[str, Any], x: Array, outs: Dict[str, Array],
                   state: Dict[str, Any], new_state: Dict[str, Any],
-                  T: int) -> None:
+                  T: int,
+                  gcfg: guards.GuardConfig = guards.GuardConfig()) -> None:
     seg_nodes = [nodes_by_name[name] for name in seg.names]
     seg_names = set(seg.names)
     sub_state = {name: state[name] for name in seg.names}
@@ -513,6 +540,16 @@ def _run_fallback(seg: Segment, nodes_by_name: Dict[str, events.LayerNode],
         return st, {name: st[name]["out"] for name in seg.names}
 
     final_sub, rec = jax.lax.scan(body, sub_state, (x, ext))
+    if gcfg.active:
+        for name in seg.names:
+            rec[name] = guards.check_tensor(f"{name}.out", rec[name], gcfg)
+            if _is_spiking(nodes_by_name[name]):
+                guards.check_spikes(name, rec[name], gcfg)
+        final_sub = {
+            name: {k: (guards.check_tensor(f"{name}.{k}", v, gcfg)
+                       if not k.startswith("syn:") else v)
+                   for k, v in ns.items()}
+            for name, ns in final_sub.items()}
     outs.update(rec)
     new_state.update(final_sub)
 
@@ -590,7 +627,8 @@ def _learn_conn(node: events.LayerNode, conn: events.Connection, lower: str,
                 params: Dict[str, Any], outs: Dict[str, Array],
                 state: Dict[str, Any], new_state: Dict[str, Any],
                 T: int, B: int, mod: Optional[Array],
-                order: Dict[str, int]) -> None:
+                order: Dict[str, int],
+                gcfg: guards.GuardConfig = guards.GuardConfig()) -> None:
     """Apply one plastic Connection's learning rule over the run window.
 
     The pre train is exactly the feed the stepper delivered: delay-shifted
@@ -625,6 +663,13 @@ def _learn_conn(node: events.LayerNode, conn: events.Connection, lower: str,
         sparams = params.get(node.name, {}).get(key)
         syn1 = plasticity.synapse_run(prog, syn0["w"], pre, post, mod_f,
                                       sparams, syn=syn0)
+    if gcfg.active:
+        # chunked-online divergence guard: a window whose learned weights
+        # go nonfinite or explode is flagged (warn/raise) or rolled back
+        # to the entry tensor (sanitize) before it is published
+        syn1 = dict(syn1)
+        syn1["w"] = guards.guard_learned(f"{node.name}.{conn.key}",
+                                         syn0["w"], syn1["w"], gcfg)
     ns = dict(new_state[node.name])
     ns[key] = syn1
     new_state[node.name] = ns
@@ -633,20 +678,22 @@ def _learn_conn(node: events.LayerNode, conn: events.Connection, lower: str,
 def _learn_pass(plan: Plan, nodes: List[events.LayerNode],
                 params: Dict[str, Any], outs: Dict[str, Array],
                 state: Dict[str, Any], new_state: Dict[str, Any],
-                T: int, B: int, mod: Optional[Array]) -> None:
+                T: int, B: int, mod: Optional[Array],
+                gcfg: guards.GuardConfig = guards.GuardConfig()) -> None:
     nodes_by_name = {n.name: n for n in nodes}
     order = {n.name: i for i, n in enumerate(nodes)}
     for p in plan.plastic:
         node = nodes_by_name[p.node]
         conn = next(c for c in node.connections if c.key == p.conn)
         _learn_conn(node, conn, p.lower, params, outs, state, new_state,
-                    T, B, mod, order)
+                    T, B, mod, order, gcfg)
 
 
 def run(nodes: List[events.LayerNode], params: Dict[str, Any], x: Array,
         state: Optional[Dict[str, Any]] = None, record: Tuple[str, ...] = (),
         plan: Optional[Plan] = None, mod: Optional[Array] = None,
-        learn: bool = True):
+        learn: bool = True,
+        guard: Union[None, str, guards.GuardConfig] = None):
     """Drop-in replacement for `events.run` through the compiled plan.
 
     x: (T, batch, n_in). Returns (final_state, outputs (T, batch, n_out),
@@ -656,17 +703,34 @@ def run(nodes: List[events.LayerNode], params: Dict[str, Any], x: Array,
     n_post)) feeding the rules' "mod" factors. Learned weights + final
     traces come back in `state[node]["syn:<conn>"]`
     (`plasticity.apply_learned` merges them into params).
+
+    Resilience hooks: active faults (`REPRO_FAULTS` / `faults.inject`)
+    perturb the input raster and weight planes once at entry and node
+    outputs inside both engines, identically. `guard` enables numerical
+    guardrails (`core/guards.py`) — a policy string off|warn|raise|sanitize
+    or a full `GuardConfig`; None defers to `REPRO_GUARD` (default off).
     """
     mode = engine_mode()
     if plan is None:
         plan = compile_program(nodes)
+    gcfg = guards.config(guard)
     do_learn = learn and bool(plan.plastic)
     nodes_by_name = {n.name: n for n in nodes}
     T, B = x.shape[0], x.shape[1]
 
+    # injected faults hit the run boundary once, before either engine (and
+    # before init_state seeds plastic synapses), so both see the same world
+    x = faults.perturb_input(x)
+    params = faults.perturb_params(params)
+    x = guards.check_tensor("input", x, gcfg)
+
     if mode == "stepper" or plan.fully_fallback:
         if not do_learn:
-            return events.run(nodes, params, x, state, record)
+            final, out, recs = events.run(nodes, params, x, state, record)
+            out = guards.check_tensor(f"{nodes[-1].name}.out", out, gcfg)
+            if gcfg.active and _is_spiking(nodes[-1]):
+                guards.check_spikes(nodes[-1].name, out, gcfg)
+            return final, out, recs
         # interpreted forward, then the same learning pass over the
         # realized spike trains (record what the plastic conns need)
         if state is None:
@@ -679,12 +743,15 @@ def run(nodes: List[events.LayerNode], params: Dict[str, Any], x: Array,
             if conn.src not in ("input", "self"):
                 needed.add(conn.src)
         final, out, recs = events.run(nodes, params, x, state, tuple(needed))
+        out = guards.check_tensor(f"{nodes[-1].name}.out", out, gcfg)
+        if gcfg.active and _is_spiking(nodes[-1]):
+            guards.check_spikes(nodes[-1].name, out, gcfg)
         outs = dict(recs)
         outs["input"] = x
         outs[nodes[-1].name] = out
         new_state = dict(final)
         _learn_pass(plan, nodes, params, outs, state, new_state,
-                    T, B, mod)
+                    T, B, mod, gcfg)
         return new_state, out, {r: outs[r] for r in record}
 
     if state is None:
@@ -694,13 +761,13 @@ def run(nodes: List[events.LayerNode], params: Dict[str, Any], x: Array,
     for seg in plan.segments:
         if seg.kind == FALLBACK:
             _run_fallback(seg, nodes_by_name, params, x, outs, state,
-                          new_state, T)
+                          new_state, T, gcfg)
         else:
             _run_fused(nodes_by_name[seg.names[0]], seg.kind, seg.lower,
-                       params, outs, state, new_state, T, B)
+                       params, outs, state, new_state, T, B, gcfg)
     if do_learn:
         _learn_pass(plan, nodes, params, outs, state, new_state,
-                    T, B, mod)
+                    T, B, mod, gcfg)
     recs = {r: outs[r] for r in record}
     return new_state, outs[nodes[-1].name], recs
 

@@ -14,7 +14,11 @@ Each kernel is a package with three modules:
 Cross-cutting machinery (mirroring the paper's single multi-granularity
 instruction set over heterogeneous dynamics):
 
-  registry.py — KernelSpec registration + the one dispatch/policy layer
+  registry.py — KernelSpec registration + the one dispatch/policy layer,
+                including the pallas -> interpret -> ref fallback chain
+  incidents.py— per-process incident log of recorded degradations
+                (query with `repro.kernels.incidents()`); REPRO_STRICT=1
+                turns every degradation into a raised FallbackError
   tuning.py   — autotuner sweeping per-spec block candidates, persisted to
                 a JSON cache keyed by (kernel, backend, shape bucket)
   parity.py   — ref<->Pallas forward + VJP agreement harness (fast CI tier)
@@ -33,3 +37,10 @@ Kernels (paper instruction -> TPU adaptation):
   stdp      (FIRE-stage learning) fused trace-outer-product weight update:
                      one HBM->VMEM->HBM pass over the weight tile per step
 """
+
+from repro.kernels.incidents import (FallbackError, FallbackEvent,  # noqa: E402
+                                     clear_incidents, incidents,
+                                     strict_mode)
+
+__all__ = ["FallbackError", "FallbackEvent", "clear_incidents", "incidents",
+           "strict_mode"]

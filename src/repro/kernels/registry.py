@@ -32,11 +32,20 @@ the pattern. The spec carries everything the generic machinery needs:
         tol=1e-4,
     ))
 
+Dispatch is also where the runtime's *failure story* lives: every call
+runs through a fallback chain (see `dispatch`) that degrades
+pallas -> interpret -> ref on a Pallas failure or VMEM-model rejection,
+records a structured `FallbackEvent` on the per-process incident log
+(`repro.kernels.incidents()`), and — under `REPRO_STRICT=1` — raises a
+`FallbackError` instead of degrading, so CI can prove the fast paths ran.
+
 Environment knobs:
   REPRO_KERNEL_IMPL     = ref | pallas | auto   (auto: pallas on TPU,
                                                  ref elsewhere)
   REPRO_PALLAS_INTERPRET= 1 | 0                 (force interpret on/off)
   REPRO_TUNING_CACHE    = path to the JSON tuning cache
+  REPRO_STRICT          = 1: degradations raise instead of falling back
+  REPRO_FAULTS          = fault-injection spec (see repro.core.faults)
 """
 
 from __future__ import annotations
@@ -46,6 +55,7 @@ import os
 from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.kernels.common import on_tpu
+from repro.kernels.incidents import FallbackError, degrade  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
@@ -252,26 +262,90 @@ def dispatch(name: str, args: Sequence[Any], force_pallas: bool = False,
     routing layer: the router picks an implementation channel per call
     (e.g. block-sparse vs dense `spikemm` by measured occupancy), then the
     usual ref-vs-Pallas policy applies within the chosen channel.
+
+    **Fallback chain.** When the Pallas stage is selected, failures do not
+    kill the run: a raising Pallas call (genuine, or injected via a
+    `compile_fail` fault — see `repro.core.faults`) degrades
+    compiled -> interpret -> ref, and a call whose modeled VMEM working
+    set (`KernelSpec.vmem_bytes`) busts the budget is rejected up front
+    (real-Mosaic calls always; interpret-mode calls only under simulated
+    `vmem_limit` fault pressure, since interpret mode has no VMEM to
+    blow). Each degradation records a `FallbackEvent` on the incident log
+    and, under `REPRO_STRICT=1`, raises `FallbackError` instead. A failing
+    channel router likewise degrades to the default (dense) channel. Note
+    the chain catches what raises *through this call*: eager/interpret
+    execution and trace-time errors, which is where Pallas failures
+    surface off-TPU; a Mosaic compile error deferred to an outer jit's
+    AOT-compile happens outside dispatch and stays fatal.
     """
+    from repro.core import faults  # local: keep core<->kernels import acyclic
+
     spec = get(name)
-    blocks = None
+    dims = spec.dims_of(*args)
+    blocks: Optional[Dict[str, int]] = None
+
+    def resolved_blocks() -> Dict[str, int]:
+        nonlocal blocks
+        if blocks is None:
+            blocks = spec.resolve_blocks(dims, overrides)
+        return blocks
+
+    chan = None
+    choice: Optional[str] = None
     if spec.select_channel is not None:
-        blocks = spec.resolve_blocks(spec.dims_of(*args), overrides)
-        choice = spec.select_channel(*args, blocks=blocks, **static)
+        try:
+            choice = spec.select_channel(*args, blocks=resolved_blocks(),
+                                         **static)
+        except Exception as e:
+            degrade("channel", name, "router", e, dims=dims, blocks=blocks)
+            choice = None
         if choice is not None:
-            ch = spec.channels[choice]
-            if not use_pallas(force_pallas):
-                return ch.ref(*args, blocks=blocks, **static)
-            return ch.pallas(*args, blocks=blocks,
-                             interpret=interpret_mode(), **static)
-    if not use_pallas(force_pallas):
+            chan = spec.channels[choice]
+
+    def run_ref():
+        if chan is not None:
+            return chan.ref(*args, blocks=resolved_blocks(), **static)
         return spec.ref(*args, **static)
-    if blocks is None:
-        blocks = spec.resolve_blocks(spec.dims_of(*args), overrides)
-    return spec.pallas(*args, blocks=blocks, interpret=interpret_mode(),
-                       **static)
+
+    if not use_pallas(force_pallas):
+        return run_ref()
+
+    pallas_fn = chan.pallas if chan is not None else spec.pallas
+    interp = interpret_mode()
+
+    if spec.vmem_bytes is not None:
+        from repro.kernels import tuning  # local: avoid import cycle
+        limit = tuning.vmem_limit_bytes()
+        pressured = faults.vmem_limit_override_bytes() is not None
+        if not interp or pressured:
+            est = spec.vmem_bytes(dims, resolved_blocks())
+            if est > limit:
+                degrade("vmem", name, "vmem-model",
+                        f"modeled working set {int(est)} B exceeds budget "
+                        f"{limit} B", channel=choice, dims=dims,
+                        blocks=blocks)
+                return run_ref()
+
+    blk = resolved_blocks()   # resolve up front so incidents carry context
+    try:
+        faults.maybe_fail_compile(name)
+        return pallas_fn(*args, blocks=blk, interpret=interp, **static)
+    except Exception as e:
+        degrade("dispatch", name, "pallas", e, channel=choice, dims=dims,
+                blocks=blk)
+    if not interp:
+        # the compiled path failed on real hardware: interpret mode runs the
+        # same kernel body in Python — slow, but it preserves the kernel's
+        # exact numerics while we limp along
+        try:
+            faults.maybe_fail_compile(name)
+            return pallas_fn(*args, blocks=blk, interpret=True, **static)
+        except Exception as e:
+            degrade("dispatch", name, "interpret", e, channel=choice,
+                    dims=dims, blocks=blk)
+    return run_ref()
 
 
-__all__ = ["BlockAxis", "Channel", "KernelSpec", "register", "get", "names",
-           "ensure_registered", "dispatch", "fit_block", "exact_block",
-           "use_pallas", "interpret_mode"]
+__all__ = ["BlockAxis", "Channel", "FallbackError", "KernelSpec", "register",
+           "get", "names", "ensure_registered", "dispatch", "fit_block",
+           "exact_block", "use_pallas", "interpret_mode"]

@@ -38,7 +38,12 @@ from typing import Any, Dict, Mapping, Optional, Tuple
 
 import jax
 
+from repro.core import faults
 from repro.kernels import registry
+# import names from the submodule directly: the `repro.kernels` package
+# re-exports an `incidents()` *function* shadowing the module attribute
+from repro.kernels.incidents import (FallbackEvent, degrade, record,
+                                     strict_mode)
 
 _ENV_CACHE = "REPRO_TUNING_CACHE"
 _ENV_VMEM_LIMIT = "REPRO_VMEM_LIMIT_MB"
@@ -155,12 +160,16 @@ def lookup_tuned(kernel: str,
 
 
 def vmem_limit_bytes() -> int:
-    """Autotune pruning budget (MiB via REPRO_VMEM_LIMIT_MB)."""
+    """VMEM budget in bytes (MiB via REPRO_VMEM_LIMIT_MB) used by autotune
+    pruning and the dispatch-time VMEM rejection guard. Simulated pressure
+    (a `vmem_limit` fault, see repro.core.faults) only ever *shrinks* it."""
     try:
         mb = float(os.environ.get(_ENV_VMEM_LIMIT, _VMEM_LIMIT_MB_DEFAULT))
     except ValueError:
         mb = _VMEM_LIMIT_MB_DEFAULT
-    return int(mb * 2 ** 20)
+    limit = int(mb * 2 ** 20)
+    injected = faults.vmem_limit_override_bytes()
+    return limit if injected is None else min(limit, injected)
 
 
 # ---------------------------------------------------------------------------
@@ -222,13 +231,22 @@ def autotune(name: str, args: Optional[tuple] = None, *,
                               "vmem_limit_bytes": limit}
     best_blocks, best_t = None, float("inf")
     for blocks in fitted:
-        fn = jax.jit(lambda *a, _b=blocks: spec.pallas(
-            *a, blocks=_b, interpret=interpret, **static))
+        def fn(*a, _b=blocks):
+            faults.maybe_fail_compile(name, autotune=True)
+            return spec.pallas(*a, blocks=_b, interpret=interpret, **static)
+
+        fn = jax.jit(fn)
         try:
             compile_s = _time_once(fn, args)           # includes compilation
             runs = [_time_once(fn, args) for _ in range(repeats)]
-        except Exception as e:  # an infeasible tile is a loser, not a crash
-            report["timings"].append({"blocks": blocks, "error": repr(e)})
+        except Exception as e:
+            # an infeasible tile is a loser, not a crash: record it and
+            # keep sweeping the remaining candidates
+            report["timings"].append({"blocks": blocks, "error": repr(e),
+                                      "infeasible": True})
+            record(FallbackEvent(
+                kind="autotune", family=name, stage="candidate",
+                error=repr(e), dims=dict(dims), blocks=dict(blocks)))
             continue
         t = min(runs)
         report["timings"].append({"blocks": blocks, "best_s": t,
@@ -236,8 +254,16 @@ def autotune(name: str, args: Optional[tuple] = None, *,
         if t < best_t:
             best_blocks, best_t = blocks, t
     if best_blocks is None:
-        raise RuntimeError(f"autotune({name!r}): every candidate failed: "
-                           f"{report['timings']}")
+        # every candidate was infeasible: degrade to the spec defaults
+        # (what dispatch uses on a cache miss anyway) rather than abort
+        # the sweep; REPRO_STRICT=1 still makes this fatal.
+        defaults = spec.resolve_blocks(dims, use_cache=False)
+        degrade("autotune", name, "sweep",
+                f"every candidate failed; falling back to spec "
+                f"defaults {defaults}", dims=dims, blocks=defaults)
+        report["winner"] = {"blocks": defaults, "best_s": None,
+                           "degraded": True}
+        return defaults, report
     report["winner"] = {"blocks": best_blocks, "best_s": best_t}
     cache.put(name, backend, bucket, best_blocks,
               stats={"best_s": best_t, "n_candidates": len(fitted)})
@@ -248,14 +274,26 @@ def autotune(name: str, args: Optional[tuple] = None, *,
 
 def autotune_all(*, cache: Optional[TuningCache] = None, repeats: int = 3,
                  save: bool = True) -> Dict[str, Dict]:
-    """Tune every registered kernel on its canonical inputs."""
+    """Tune every registered kernel on its canonical inputs.
+
+    One kernel blowing up must not abort the whole sweep: its error is
+    recorded (report entry + incident) and the sweep continues — except
+    under REPRO_STRICT=1, where the failure propagates.
+    """
     registry.ensure_registered()
     reports = {}
     for name in registry.names():
         if registry.get(name).make_inputs is None:
             continue
-        _, reports[name] = autotune(name, cache=cache, repeats=repeats,
-                                    save=save)
+        try:
+            _, reports[name] = autotune(name, cache=cache, repeats=repeats,
+                                        save=save)
+        except Exception as e:
+            if strict_mode():
+                raise
+            record(FallbackEvent(
+                kind="autotune", family=name, stage="kernel", error=repr(e)))
+            reports[name] = {"kernel": name, "error": repr(e)}
     return reports
 
 

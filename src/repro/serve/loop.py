@@ -12,17 +12,30 @@ The event-driven framing maps back to the paper: a decode step is the FIRE
 stage (every live slot emits one "spike"/token), the cache update is the
 INTEG stage; retired slots are silent neurons that cost nothing because the
 batch is re-packed — block-granular sparsity again.
+
+`generate_resilient` wraps the same cohort loop for deployments that must
+answer every request: a failing cohort is retried with bounded,
+deterministically-jittered backoff; exhausted retries (and per-request
+deadline misses) come back as explicitly `degraded` `ServeResult`s instead
+of an exception, each recorded on the incident log
+(`repro.kernels.incidents()`). Under `REPRO_STRICT=1` failures propagate —
+retry loops must not launder errors CI wants loud.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import random
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# direct submodule imports: the `repro.kernels` package re-exports an
+# `incidents()` function that shadows the module attribute of that name
+from repro.kernels.incidents import FallbackEvent, record, strict_mode
 from repro.models import lm
 from repro.models.config import ModelConfig
 
@@ -41,6 +54,29 @@ class ServeConfig:
     max_seq: int = 512
     eos_id: int = -1                   # -1: never stops early
     greedy: bool = True
+    # resilient-path knobs (generate_resilient only)
+    deadline_s: Optional[float] = None  # per-request wall-clock budget
+    max_retries: int = 2                # extra attempts per failing cohort
+    retry_base_s: float = 0.05          # backoff base: base * 2**attempt
+    retry_jitter: float = 0.5           # +- fraction of the backoff step
+    retry_seed: int = 0                 # jitter PRNG seed (deterministic)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One request's outcome from `generate_resilient`.
+
+    `degraded` marks responses that are not what a healthy serve would
+    have produced: the cohort exhausted its retries (tokens is empty,
+    `error` holds the last exception) or the request finished past its
+    deadline (tokens are complete but late).
+    """
+
+    tokens: np.ndarray
+    degraded: bool = False
+    retries: int = 0
+    latency_s: float = 0.0
+    error: Optional[str] = None
 
 
 def _pad_prompts(reqs: List[Request], max_seq: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -60,6 +96,62 @@ def generate(params: Any, cfg: ModelConfig, reqs: List[Request],
     for lo in range(0, len(reqs), serve_cfg.batch):
         cohort = reqs[lo:lo + serve_cfg.batch]
         out.extend(_generate_cohort(params, cfg, cohort, serve_cfg))
+    return out
+
+
+def generate_resilient(params: Any, cfg: ModelConfig, reqs: List[Request],
+                       serve_cfg: ServeConfig) -> List[ServeResult]:
+    """Serve every request, degrading instead of dying.
+
+    Per cohort: run `_generate_cohort`; on failure, retry up to
+    `max_retries` times with exponential backoff whose jitter comes from a
+    PRNG seeded by (retry_seed, cohort index) — deterministic across
+    processes, so incident timelines reproduce. A cohort that exhausts its
+    retries yields empty-token degraded results carrying the error; a
+    request that completes after `deadline_s` is flagged degraded but
+    keeps its tokens. Under REPRO_STRICT=1 the first failure propagates.
+    """
+    assert cfg.family not in ("encdec",), "use serve.whisper for enc-dec"
+    out: List[ServeResult] = []
+    for ci, lo in enumerate(range(0, len(reqs), serve_cfg.batch)):
+        cohort = reqs[lo:lo + serve_cfg.batch]
+        rng = random.Random(serve_cfg.retry_seed * 1000003 + ci)
+        t0 = time.monotonic()
+        tokens: Optional[List[np.ndarray]] = None
+        err: Optional[BaseException] = None
+        attempt = 0
+        for attempt in range(serve_cfg.max_retries + 1):
+            try:
+                tokens = _generate_cohort(params, cfg, cohort, serve_cfg)
+                break
+            except Exception as e:
+                if strict_mode():
+                    raise   # never launder a failure CI asked to see
+                err = e
+                record(FallbackEvent(
+                    kind="serve", family="generate", stage=f"attempt{attempt}",
+                    error=repr(e), dims={"cohort": ci, "n": len(cohort)}))
+                if attempt < serve_cfg.max_retries:
+                    step = serve_cfg.retry_base_s * (2 ** attempt)
+                    step *= 1.0 + serve_cfg.retry_jitter * (2 * rng.random() - 1)
+                    time.sleep(max(0.0, step))
+        latency = time.monotonic() - t0
+        late = (serve_cfg.deadline_s is not None
+                and latency > serve_cfg.deadline_s)
+        if late and tokens is not None:
+            record(FallbackEvent(
+                kind="serve", family="generate", stage="deadline",
+                error=f"cohort finished in {latency:.3f}s "
+                      f"(deadline {serve_cfg.deadline_s}s)",
+                dims={"cohort": ci, "n": len(cohort)}))
+        for i in range(len(cohort)):
+            if tokens is None:
+                out.append(ServeResult(np.zeros((0,), np.int32),
+                                       degraded=True, retries=attempt,
+                                       latency_s=latency, error=repr(err)))
+            else:
+                out.append(ServeResult(tokens[i], degraded=late,
+                                       retries=attempt, latency_s=latency))
     return out
 
 

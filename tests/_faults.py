@@ -1,0 +1,63 @@
+"""Shared plumbing for the resilience / fault-injection tests.
+
+Tiny deterministic SNNs + spike rasters, and an env-var context manager,
+so test modules assert on behavior instead of rebuilding fixtures. Also
+the place where chaos-CI compatibility lives: every helper pins its own
+seeds, and tests that need a *clean* world wrap themselves in
+`faults.inject("")`, which overrides any `REPRO_FAULTS` the environment
+(e.g. the nightly chaos job) carries.
+"""
+
+import contextlib
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.snn_layers import make_dhsnn_shd, make_plastic_ff
+
+
+@contextlib.contextmanager
+def env(**kv):
+    """Temporarily set (value) or unset (None) environment variables."""
+    old = {k: os.environ.get(k) for k in kv}
+    try:
+        for k, v in kv.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+        yield
+    finally:
+        for k, v in old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def forced_pallas():
+    """Select the Pallas (interpret on CPU) stage so dispatch's fallback
+    chain is actually reachable off-TPU. Also clears any ambient
+    REPRO_STRICT (the CI fast tier runs strict): tests built on this
+    helper exercise *degradation*, and pin their own strict world —
+    enter `env(REPRO_STRICT="1")` after this to assert strict behavior."""
+    return env(REPRO_KERNEL_IMPL="pallas", REPRO_STRICT=None)
+
+
+def spikes(key, T=12, B=4, n=32, rate=0.3, dtype=jnp.float32):
+    return (jax.random.uniform(key, (T, B, n)) < rate).astype(dtype)
+
+
+def dh_net(key=None, n_in=32, n_hidden=24, n_out=8):
+    """Feed-forward DH-LIF net: exercises linrec + lif + spikemm through
+    the fused plan engine, with no recurrence (so fault masks are
+    bit-identical across engines)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    return make_dhsnn_shd(key, n_in=n_in, n_hidden=n_hidden, n_out=n_out)
+
+
+def plastic_net(key=None, n_in=24, n_hidden=16, n_out=4):
+    """2-layer LIF whose input edge learns on-chip (stdp_seq lowering)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    return make_plastic_ff(key, n_in=n_in, n_hidden=n_hidden, n_out=n_out)

@@ -38,6 +38,17 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _clear_incidents():
+    """Isolate the per-process incident log (repro.kernels.incidents)
+    between tests, so one test's recorded degradations cannot satisfy or
+    pollute another's assertions."""
+    from repro.kernels.incidents import clear
+    clear()
+    yield
+    clear()
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running integration/smoke test; excluded "

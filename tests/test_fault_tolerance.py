@@ -1,5 +1,6 @@
 """Fault-tolerance tests: checkpoint roundtrip + integrity, restart-resume,
-corrupt-checkpoint fallback, elastic re-shard, deterministic skip-ahead."""
+corrupt-checkpoint fallback, elastic re-shard, deterministic skip-ahead,
+and mid-stream chunked-online snapshot/resume bit-identity."""
 
 import os
 
@@ -9,12 +10,15 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
+from repro.core import faults, plan, plasticity
 from repro.data.tokens import TokenStream
 from repro.models import lm
 from repro.optim.adamw import AdamWConfig
-from repro.train.checkpoint import (CheckpointManager, latest_step,
-                                    restore_checkpoint, save_checkpoint)
+from repro.train.checkpoint import (CheckpointManager, StreamCheckpointer,
+                                    latest_step, restore_checkpoint,
+                                    save_checkpoint)
 from repro.train.loop import TrainLoopConfig, train_loop
+from tests._faults import plastic_net, spikes
 
 
 def _tree_equal(a, b):
@@ -103,6 +107,80 @@ def test_async_save_equivalent(tmp_path):
     mgr.save_async(7, tree)
     mgr.wait()
     assert latest_step(str(tmp_path)) == 7
+
+
+def _tree_bit_equal(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(fa) == len(fb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(fa, fb))
+
+
+def _stream_windows(nodes, params, state, key, start, stop, ckpt=None):
+    """Run chunked-online windows [start, stop); optionally snapshot each."""
+    for w in range(start, stop):
+        x = spikes(jax.random.fold_in(key, w), n=24)
+        state, _, _ = plan.run(nodes, params, x, state=state)
+        params = plasticity.apply_learned(nodes, params, state)
+        if ckpt is not None:
+            ckpt.save(w, state, params=params,
+                      rng=jax.random.key_data(key))
+    return params, state
+
+
+def test_stream_checkpoint_resume_bit_identical(tmp_path):
+    """The acceptance scenario: interrupt a plastic chunked-online stream
+    mid-sequence, restore from the StreamCheckpointer, finish — final
+    weights, neuron state, AND synapse traces match the uninterrupted run
+    bit for bit."""
+    key = jax.random.PRNGKey(7)
+    with faults.inject(""):
+        # uninterrupted: 6 windows straight
+        nodes, params0 = plastic_net()
+        from repro.core import events
+        state0 = events.init_state(nodes, 4, jnp.float32, params0)
+        p_ref, s_ref = _stream_windows(nodes, dict(params0), state0,
+                                       key, 0, 6)
+
+        # interrupted: 3 windows + snapshot each, then a cold process
+        ck = StreamCheckpointer(str(tmp_path), keep=2)
+        _stream_windows(nodes, dict(params0), state0, key, 0, 3, ckpt=ck)
+
+        # "restart": fresh templates, restore, resume from window+1
+        nodes2, params2 = plastic_net()
+        state2 = events.init_state(nodes2, 4, jnp.float32, params2)
+        ck2 = StreamCheckpointer(str(tmp_path), keep=2)
+        window, state2, params2, rng = ck2.restore_latest(
+            state2, params=params2, rng=jax.random.key_data(key))
+        assert window == 2                       # windows 0..2 completed
+        key2 = jax.random.wrap_key_data(jnp.asarray(rng))
+        p_res, s_res = _stream_windows(nodes2, params2, state2,
+                                       key2, window + 1, 6)
+
+    assert _tree_bit_equal(p_ref, p_res)
+    assert _tree_bit_equal(s_ref, s_res)
+
+
+def test_stream_checkpoint_cold_start_passthrough(tmp_path):
+    nodes, params = plastic_net()
+    from repro.core import events
+    state = events.init_state(nodes, 4, jnp.float32, params)
+    ck = StreamCheckpointer(str(tmp_path / "empty"))
+    window, s, p, r = ck.restore_latest(state, params=params, rng=None)
+    assert window is None
+    assert _tree_bit_equal(s, state) and _tree_bit_equal(p, params)
+    assert r is None
+
+
+def test_stream_checkpoint_keeps_last_k(tmp_path):
+    nodes, params = plastic_net()
+    from repro.core import events
+    state = events.init_state(nodes, 4, jnp.float32, params)
+    ck = StreamCheckpointer(str(tmp_path), keep=2)
+    for w in range(4):
+        ck.save(w, state, params=params)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [2, 3]
 
 
 def test_token_stream_skip_ahead_deterministic():

@@ -1,0 +1,334 @@
+"""Resilient-execution tests: the dispatch fallback chain, strict mode,
+numerical guardrails, autotune degradation, serve retry/deadline handling,
+and the perf gate's corrupt-artifact tolerance."""
+
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import compare as cmp
+from repro.core import faults, guards, plan, plasticity
+from repro.kernels import registry, tuning
+from repro.kernels.incidents import (FallbackError, clear, incidents,
+                                     strict_mode)
+from tests._faults import dh_net, env, forced_pallas, plastic_net, spikes
+
+
+# ---------------------------------------------------------------------------
+# dispatch fallback chain
+# ---------------------------------------------------------------------------
+
+
+def _linrec_args(key=None):
+    key = jax.random.PRNGKey(0) if key is None else key
+    k1, k2 = jax.random.split(key)
+    a = jnp.full((16, 4, 32), 0.9, jnp.float32)
+    x = jax.random.normal(k1, (16, 4, 32))
+    h0 = jax.random.normal(k2, (4, 32))
+    return a, x, h0
+
+
+def test_forced_pallas_failure_degrades_bit_identical_to_ref():
+    args = _linrec_args()
+    with env(REPRO_KERNEL_IMPL="ref"), faults.inject(""):
+        ref = registry.dispatch("linrec", args)
+    clear()
+    with forced_pallas(), faults.inject("compile_fail:kernels=linrec"):
+        out = registry.dispatch("linrec", args)
+    for r, o in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+    evs = incidents(family="linrec", kind="dispatch")
+    assert len(evs) == 1                       # exactly one degradation
+    assert evs[0].stage == "pallas"
+    assert "FaultInjectedError" in evs[0].error
+    assert evs[0].dims and evs[0].blocks       # structured context rode along
+
+
+def test_untargeted_kernels_do_not_degrade():
+    clear()
+    with forced_pallas(), faults.inject("compile_fail:kernels=attention"):
+        registry.dispatch("linrec", _linrec_args())
+    assert incidents(kind="dispatch") == ()
+
+
+def test_strict_mode_turns_degradation_into_raise():
+    # strict is set AFTER forced_pallas (which clears ambient strict)
+    with forced_pallas(), env(REPRO_STRICT="1"), \
+            faults.inject("compile_fail:kernels=linrec"):
+        assert strict_mode()
+        with pytest.raises(FallbackError, match="linrec"):
+            registry.dispatch("linrec", _linrec_args())
+
+
+def test_vmem_pressure_rejects_pallas_and_runs_ref():
+    args = _linrec_args()
+    with env(REPRO_KERNEL_IMPL="ref"), faults.inject(""):
+        ref = registry.dispatch("linrec", args)
+    clear()
+    with forced_pallas(), faults.inject("vmem_limit:mb=0.0001"):
+        out = registry.dispatch("linrec", args)
+    for r, o in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+    evs = incidents(family="linrec", kind="vmem")
+    assert len(evs) == 1 and evs[0].stage == "vmem-model"
+
+
+def test_plan_run_completes_under_total_kernel_failure():
+    """The acceptance scenario: every Pallas kernel failing to compile
+    must leave plan.run bit-identical to the pure-ref path, with the
+    degradations on the incident log; REPRO_STRICT=1 makes it raise."""
+    nodes, params = dh_net()
+    x = spikes(jax.random.PRNGKey(1))
+    with env(REPRO_KERNEL_IMPL="ref"), faults.inject(""):
+        _, ref_out, _ = plan.run(nodes, params, x)
+    clear()
+    with forced_pallas(), faults.inject("compile_fail:kernels=*"):
+        _, out, _ = plan.run(nodes, params, x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref_out))
+    families = {e.family for e in incidents(kind="dispatch")}
+    assert {"linrec", "lif", "spikemm"} <= families
+    with forced_pallas(), env(REPRO_STRICT="1"), \
+            faults.inject("compile_fail:kernels=*"):
+        with pytest.raises(FallbackError):
+            plan.run(nodes, params, x)
+
+
+# ---------------------------------------------------------------------------
+# numerical guardrails
+# ---------------------------------------------------------------------------
+
+
+def test_guard_off_by_default_and_env_resolution(monkeypatch):
+    assert not guards.config(None).active
+    monkeypatch.setenv("REPRO_GUARD", "warn")
+    assert guards.config(None).policy == "warn"
+    with pytest.raises(ValueError, match="REPRO_GUARD"):
+        guards.config("shrug")
+
+
+def test_guard_sanitize_repairs_nonfinite_input():
+    nodes, params = dh_net()
+    x = spikes(jax.random.PRNGKey(1)).at[0, 0, 0].set(jnp.nan)
+    with faults.inject(""):
+        _, out, _ = plan.run(nodes, params, x, guard="sanitize")
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_guard_warn_records_incident_and_raise_raises():
+    nodes, params = dh_net()
+    x = spikes(jax.random.PRNGKey(1))
+    bad = {k: dict(v) for k, v in params.items()}
+    bad["hidden"]["w_input"] = bad["hidden"]["w_input"].at[0, 0, 0].set(
+        jnp.nan)
+    clear()
+    with faults.inject(""), warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        plan.run(nodes, bad, x, guard="warn")
+    assert incidents(kind="guard")
+    with faults.inject(""):
+        with pytest.raises(guards.GuardViolation, match="nonfinite"):
+            plan.run(nodes, bad, x, guard="raise")
+
+
+def test_guard_flags_silent_population():
+    nodes, params = dh_net()
+    x = jnp.zeros((12, 4, 32))                  # no input -> no spikes
+    clear()
+    with faults.inject(""), warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        plan.run(nodes, params, x, guard="warn")
+    assert any(e.error.startswith("population silent")
+               for e in incidents(kind="guard"))
+
+
+def test_guard_learned_rolls_back_diverged_window():
+    w0 = jnp.ones((8, 8))
+    cfg = guards.GuardConfig(policy="sanitize")
+    # nonfinite entries fall back elementwise
+    w1 = w0.at[0, 0].set(jnp.nan)
+    fixed = guards.guard_learned("t", w0, w1, cfg)
+    np.testing.assert_array_equal(np.asarray(fixed), np.asarray(w0))
+    # a norm explosion rolls the whole window back
+    blown = 1e6 * w0
+    np.testing.assert_array_equal(
+        np.asarray(guards.guard_learned("t", w0, blown, cfg)),
+        np.asarray(w0))
+    # a sane update passes through untouched
+    ok = 1.5 * w0
+    np.testing.assert_array_equal(
+        np.asarray(guards.guard_learned("t", w0, ok, cfg)), np.asarray(ok))
+
+
+def test_guard_learned_in_plan_run():
+    """A plasticity rule driven into NaN territory publishes the entry
+    weights under sanitize instead of a poisoned window."""
+    nodes, params = plastic_net()
+    params = {k: dict(v) for k, v in params.items()}
+    params["hidden"]["w_input"] = params["hidden"]["w_input"].at[0, 0].set(
+        jnp.nan)
+    x = spikes(jax.random.PRNGKey(2), n=24)
+    with faults.inject(""):
+        state, _, _ = plan.run(nodes, params, x,
+                               guard=guards.GuardConfig(policy="sanitize"))
+    w1 = state["hidden"]["syn:input"]["w"]
+    assert bool(jnp.isfinite(w1).all())
+
+
+# ---------------------------------------------------------------------------
+# autotuner degradation
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_records_infeasible_candidates_and_continues(tmp_path):
+    cache = tuning.TuningCache(str(tmp_path / "cache.json"))
+    clear()
+    with env(REPRO_STRICT=None), \
+            faults.inject("compile_fail:kernels=linrec,autotune=1"):
+        blocks, report = tuning.autotune("linrec", cache=cache, repeats=1,
+                                         save=False)
+    assert blocks                                # spec defaults came back
+    assert report["winner"]["degraded"] is True
+    assert all(t.get("infeasible") for t in report["timings"])
+    assert incidents(family="linrec", kind="autotune")
+
+
+def test_autotune_without_autotune_flag_is_unaffected(tmp_path):
+    cache = tuning.TuningCache(str(tmp_path / "cache.json"))
+    with faults.inject("compile_fail:kernels=linrec"):   # dispatch-only fault
+        blocks, report = tuning.autotune("linrec", cache=cache, repeats=1,
+                                         save=False)
+    assert report["winner"].get("degraded") is None
+    assert report["winner"]["best_s"] is not None
+
+
+def test_autotune_strict_raises_on_total_failure(tmp_path):
+    cache = tuning.TuningCache(str(tmp_path / "cache.json"))
+    with env(REPRO_STRICT="1"), \
+            faults.inject("compile_fail:kernels=linrec,autotune=1"):
+        with pytest.raises(FallbackError):
+            tuning.autotune("linrec", cache=cache, repeats=1, save=False)
+
+
+# ---------------------------------------------------------------------------
+# serve: retries, degradation flags, deadlines
+# ---------------------------------------------------------------------------
+
+
+def _serve_fixture():
+    from repro.configs import get_smoke_config
+    from repro.models import lm
+    from repro.serve.loop import Request, ServeConfig
+
+    cfg = get_smoke_config("llama3.2-3b").replace(dtype="float32")
+    params = lm.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(1, 200, size=n).astype(np.int32), max_new=4)
+            for n in (5, 3, 7)]
+    return cfg, params, reqs, ServeConfig
+
+
+@pytest.mark.slow
+def test_generate_resilient_healthy_matches_generate():
+    from repro.serve.loop import generate, generate_resilient
+
+    cfg, params, reqs, ServeConfig = _serve_fixture()
+    scfg = ServeConfig(batch=2, max_seq=32)
+    plain = generate(params, cfg, reqs, scfg)
+    res = generate_resilient(params, cfg, reqs, scfg)
+    assert len(res) == len(plain)
+    for p, r in zip(plain, res):
+        np.testing.assert_array_equal(p, r.tokens)
+        assert not r.degraded and r.retries == 0 and r.error is None
+
+
+@pytest.mark.slow
+def test_generate_resilient_exhausted_retries_degrade(monkeypatch):
+    from repro.serve import loop as serve_loop
+
+    cfg, params, reqs, ServeConfig = _serve_fixture()
+    calls = {"n": 0}
+
+    def boom(*a, **kw):
+        calls["n"] += 1
+        raise RuntimeError("injected serve failure")
+
+    monkeypatch.setattr(serve_loop, "_generate_cohort", boom)
+    monkeypatch.delenv("REPRO_STRICT", raising=False)
+    clear()
+    scfg = ServeConfig(batch=2, max_seq=32, max_retries=2,
+                       retry_base_s=0.0)
+    res = serve_loop.generate_resilient(params, cfg, reqs, scfg)
+    assert len(res) == len(reqs)
+    assert all(r.degraded and r.tokens.size == 0 for r in res)
+    assert all("injected serve failure" in r.error for r in res)
+    assert calls["n"] == 2 * 3                  # 2 cohorts x (1 + 2 retries)
+    assert len(incidents(kind="serve")) == 6
+
+
+@pytest.mark.slow
+def test_generate_resilient_strict_propagates(monkeypatch):
+    from repro.serve import loop as serve_loop
+
+    cfg, params, reqs, ServeConfig = _serve_fixture()
+    monkeypatch.setattr(serve_loop, "_generate_cohort",
+                        lambda *a, **kw: (_ for _ in ()).throw(
+                            RuntimeError("boom")))
+    with env(REPRO_STRICT="1"):
+        with pytest.raises(RuntimeError, match="boom"):
+            serve_loop.generate_resilient(
+                params, cfg, reqs, ServeConfig(batch=2, max_seq=32))
+
+
+@pytest.mark.slow
+def test_generate_resilient_deadline_flags_late_responses():
+    from repro.serve.loop import generate_resilient
+
+    cfg, params, reqs, ServeConfig = _serve_fixture()
+    scfg = ServeConfig(batch=8, max_seq=32, deadline_s=0.0)
+    clear()
+    res = generate_resilient(params, cfg, reqs, scfg)
+    assert all(r.degraded for r in res)         # everything misses 0s
+    assert all(r.tokens.size > 0 for r in res)  # but the answers are intact
+    assert any(e.stage == "deadline" for e in incidents(kind="serve"))
+
+
+# ---------------------------------------------------------------------------
+# perf gate tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_compare_tolerates_corrupt_bench_file(tmp_path, capsys):
+    (tmp_path / "BENCH_kernels.json").write_text("{not json")
+    assert cmp.load_suite(str(tmp_path), "kernels") is None
+    assert "unreadable bench file" in capsys.readouterr().out
+
+
+def test_compare_missing_rows_warn_with_update_hint(tmp_path, capsys):
+    baselines = tmp_path / "baselines"
+    baselines.mkdir()
+    (baselines / "tracked.json").write_text(json.dumps({"tracked": [
+        {"suite": "kernels", "path": "a/b", "direction": "higher"}]}))
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    rc = cmp.main([str(fresh), "--baselines", str(baselines), "--gate"])
+    out = capsys.readouterr().out
+    assert rc == 0                              # missing rows never gate
+    assert "missing" in out
+    assert "--update-baselines" in out
+
+
+def test_chunked_online_survives_guarded_faults():
+    """End-to-end graceful degradation: a plastic stream under packet loss
+    + dead rows + guards keeps producing finite weights every window."""
+    nodes, params = plastic_net()
+    key = jax.random.PRNGKey(0)
+    with faults.inject("drop_blocks:p=0.2,seed=1;dead_rows:frac=0.1,seed=2"):
+        for w in range(3):
+            x = spikes(jax.random.fold_in(key, w), n=24)
+            state, _, _ = plan.run(nodes, params, x, guard="sanitize")
+            params = plasticity.apply_learned(nodes, params, state)
+            assert bool(jnp.isfinite(params["hidden"]["w_input"]).all())
