@@ -25,12 +25,12 @@ from repro.data.spikes import gen_bci_trials, gen_ecg_qtdb, gen_shd_spikes
 def _clipped_sgd(loss_fn, params, steps, lr):
     grad_fn = jax.jit(jax.value_and_grad(loss_fn))
     for _ in range(steps):
-        l, g = grad_fn(params)
+        loss, g = grad_fn(params)
         gn = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(g)))
         sc = jnp.minimum(1.0, 1.0 / (gn + 1e-9))
         params = jax.tree.map(
             lambda p, gg: p - lr * sc * gg if gg is not None else p, params, g)
-    return params, float(l)
+    return params, float(loss)
 
 
 def ecg_task(heterogeneous: bool) -> Dict:

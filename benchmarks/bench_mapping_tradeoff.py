@@ -6,10 +6,12 @@ Paper: cores rise 4x (182 -> 749) while energy efficiency falls 1.7x
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict
 
 import numpy as np
 
+from repro import analysis
 from repro.configs.snn_models import MODELS, to_ops
 from repro.core.mapping import CORE_NEURONS, compile_network, fuse_ops, merge_cores, partition
 from repro.core.simulator import LayerStats, simulate
@@ -24,9 +26,14 @@ def run() -> Dict:
     # sweep the per-core population budget: small budget = spread = throughput
     for frac in (1.0, 0.5, 0.25, 0.125):
         ir = fuse_ops([o for o in ops])
-        cores = partition(ir, core_neurons=max(8, int(CORE_NEURONS * frac)))
+        budget = max(8, int(CORE_NEURONS * frac))
+        cores = partition(ir, core_neurons=budget)
         if frac == 1.0:
             cores = merge_cores(cores, ir)
+        # every swept placement must pass the static validator (TB4xx)
+        bad = analysis.at_least(
+            analysis.check_cores(cores, ir, core_neurons=budget), "error")
+        assert not bad, "\n".join(str(d) for d in bad)
         n = len(cores)
         stats = [LayerStats(o.name, o.n_neurons, o.fan_in, 0.13,
                             2.0 * o.n_neurons * o.fan_in)
@@ -43,6 +50,12 @@ def run() -> Dict:
                        "fps_per_w": eff})
         print(f"budget {frac:5.3f}  cores {n:5d}  fps {rep.throughput_fps:9.1f}  "
               f"eff {eff:9.1f} FPS/W")
+    # one end-to-end placement through the full validator (positions too)
+    fresh = to_ops(MODELS["5blocks_net"]()[0])
+    mapped = compile_network(fresh, anneal_iters=100)
+    ir = fuse_ops([dataclasses.replace(o) for o in fresh])
+    bad = analysis.at_least(analysis.check_mapping(mapped, ir), "error")
+    assert not bad, "\n".join(str(d) for d in bad)
     c = [p["n_cores"] for p in points]
     e = [p["fps_per_w"] for p in points]
     print(f"cores x{max(c)/min(c):.1f} (paper: x4.1), "

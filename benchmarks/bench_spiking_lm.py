@@ -21,7 +21,6 @@ from repro.configs import get_smoke_config
 from repro.data.tokens import TokenStream
 from repro.kernels.spikemm.ops import occupancy_fraction
 from repro.models import lm
-from repro.models.blocks import mlp_apply
 from repro.core.surrogate import spike
 from repro.optim.adamw import AdamWConfig
 

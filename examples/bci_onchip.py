@@ -11,7 +11,6 @@ Run: PYTHONPATH=src python examples/bci_onchip.py
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.snn_layers import (BCIConfig, bci_finetune_fc, bci_forward,
                                    bci_init)
@@ -35,13 +34,13 @@ def loss_grad(params):
 
 print("training on day 0 ...")
 for i in range(100):
-    l, g = loss_grad(params)
+    loss, g = loss_grad(params)
     gn = jnp.sqrt(sum(jnp.sum(jnp.square(gg)) for gg in jax.tree.leaves(g)))
     params = jax.tree.map(
         lambda p, gg: p - 0.05 * jnp.minimum(1.0, 1.0 / (gn + 1e-9)) * gg,
         params, g)
     if i % 25 == 0:
-        print(f"  step {i:3d} loss {float(l):.4f}")
+        print(f"  step {i:3d} loss {float(loss):.4f}")
 
 
 def acc(p, x, y):

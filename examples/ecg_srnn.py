@@ -34,14 +34,14 @@ def train(heterogeneous: bool, steps: int, T: int = 200):
         return jax.value_and_grad(loss)(params)
 
     for i in range(steps):
-        l, g = loss_grad(params)
+        loss, g = loss_grad(params)
         gn = jnp.sqrt(sum(jnp.sum(jnp.square(gg))
                           for gg in jax.tree.leaves(g)))
         sc = jnp.minimum(1.0, 1.0 / (gn + 1e-9))
         params = jax.tree.map(lambda p, gg: p - 0.1 * sc * gg
                               if gg is not None else p, params, g)
         if i % 25 == 0:
-            print(f"  step {i:4d} loss {float(l):.4f}")
+            print(f"  step {i:4d} loss {float(loss):.4f}")
 
     xt, yt = gen_ecg_qtdb(8, seed=7, T=T)
     _, outs, _ = plan.run(nodes, params, jnp.asarray(xt.transpose(1, 0, 2)))

@@ -38,14 +38,14 @@ def train(dendritic: bool, steps: int):
         return jax.value_and_grad(loss)(params)
 
     for i in range(steps):
-        l, g = loss_grad(params)
+        loss, g = loss_grad(params)
         gn = jnp.sqrt(sum(jnp.sum(jnp.square(gg))
                           for gg in jax.tree.leaves(g)))
         params = jax.tree.map(
             lambda p, gg: p - 0.2 * jnp.minimum(1.0, 1.0 / (gn + 1e-9)) * gg
             if gg is not None else p, params, g)
         if i % 25 == 0:
-            print(f"  step {i:4d} loss {float(l):.4f}")
+            print(f"  step {i:4d} loss {float(loss):.4f}")
 
     xt, yt = gen_shd_spikes(48, T=60, seed=11)
     _, outs, recs = plan.run(nodes, params,

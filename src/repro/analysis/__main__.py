@@ -1,0 +1,131 @@
+"""CLI: lint the kernel registry, the shipped models, and their mappings.
+
+Usage:
+  python -m repro.analysis --all [--fail-on warning] [--json]
+  python -m repro.analysis --kernels
+  python -m repro.analysis --models [-T 128] [-B 8]
+  python -m repro.analysis --mapping
+
+Exit status 1 when findings at/above --fail-on exist (default: error;
+"never" always exits 0). CI runs `--all --fail-on warning` as a fast-tier
+gate: the shipped registry and application models must check clean.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Callable, Dict, List, Tuple
+
+from repro.analysis.diagnostics import Diagnostic, at_least, render
+
+
+def _model_factories() -> Dict[str, Callable[..., Tuple[list, dict]]]:
+    from repro.core import snn_layers as L
+    return {
+        "srnn_ecg": L.make_srnn_ecg,
+        "srnn_ecg_homogeneous":
+            lambda key: L.make_srnn_ecg(key, heterogeneous=False),
+        "dhsnn_shd": L.make_dhsnn_shd,
+        "plastic_ff": L.make_plastic_ff,
+    }
+
+
+def _check_models(T: int, B: int) -> List[Diagnostic]:
+    import jax
+
+    from repro import analysis
+    out: List[Diagnostic] = []
+    for name, factory in _model_factories().items():
+        nodes, params = factory(jax.random.PRNGKey(0))
+        for d in analysis.check_nodes(nodes, params=params, T=T, B=B):
+            out.append(Diagnostic(d.code, d.severity, f"{name}:{d.site}",
+                                  d.message, d.hint))
+    return out
+
+
+def _check_mappings() -> List[Diagnostic]:
+    from repro import analysis
+    from repro.configs import snn_models
+    from repro.core import mapping as mp
+
+    out: List[Diagnostic] = []
+    for name, factory in sorted(snn_models.MODELS.items()):
+        specs, _ = factory()
+        ops = snn_models.to_ops(specs)
+        ir = mp.fuse_ops([dataclasses.replace(o) for o in ops])
+        for label, cores in (
+                ("partition", mp.partition(ir)),
+                ("merged", mp.merge_cores(mp.partition(ir), ir))):
+            for d in analysis.check_cores(cores, ir):
+                out.append(Diagnostic(d.code, d.severity,
+                                      f"{name}:{label}:{d.site}",
+                                      d.message, d.hint))
+    # one end-to-end placement (cheap anneal) through the full validator
+    specs, _ = snn_models.MODELS["plif_net"]()
+    ops = snn_models.to_ops(specs)
+    mapped = mp.compile_network(ops, anneal_iters=50)
+    ir = mp.fuse_ops([dataclasses.replace(o) for o in ops])
+    for d in analysis.check_mapping(mapped, ir):
+        out.append(Diagnostic(d.code, d.severity, f"plif_net:placed:{d.site}",
+                              d.message, d.hint))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static checks over programs, plans, kernel specs, "
+                    "and mappings (TB1xx-TB4xx).")
+    ap.add_argument("--all", action="store_true",
+                    help="kernels + models + mappings (the CI gate)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="TB3xx over every registered kernel family")
+    ap.add_argument("--models", action="store_true",
+                    help="TB1xx/TB2xx over the shipped application models")
+    ap.add_argument("--mapping", action="store_true",
+                    help="TB4xx over configs/snn_models.py mappings")
+    ap.add_argument("--fail-on", choices=["error", "warning", "never"],
+                    default="error",
+                    help="exit 1 when findings at/above this severity "
+                         "exist (default: error)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("-T", type=int, default=128,
+                    help="time steps assumed for VMEM prediction (TB230)")
+    ap.add_argument("-B", type=int, default=8,
+                    help="batch assumed for VMEM prediction (TB230)")
+    args = ap.parse_args(argv)
+
+    if not (args.all or args.kernels or args.models or args.mapping):
+        args.all = True
+
+    from repro import analysis
+
+    diags: List[Diagnostic] = []
+    if args.all or args.kernels:
+        diags.extend(analysis.check_kernels())
+    if args.all or args.models:
+        diags.extend(_check_models(args.T, args.B))
+    if args.all or args.mapping:
+        diags.extend(_check_mappings())
+
+    if args.json:
+        print(json.dumps([d.__dict__ for d in at_least(diags, "info")],
+                         indent=1))
+    else:
+        print(render(diags))
+        counts = {s: sum(1 for d in diags if d.severity == s)
+                  for s in ("error", "warning", "info")}
+        print(f"-- {counts['error']} error(s), {counts['warning']} "
+              f"warning(s), {counts['info']} info")
+
+    if args.fail_on == "never":
+        return 0
+    return 1 if at_least(diags, args.fail_on) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,326 @@
+"""TB3xx: static checks over registered KernelSpecs.
+
+For every registered kernel family, at its default block shapes AND every
+tuning candidate:
+
+  * grid x index-map coverage: the output tiling implied by the spec's
+    `TileModel` writes every output element exactly once — no gaps
+    (TB301), no overlaps (TB302);
+  * block contracts: preferred/align consistency and exact-axis division
+    (TB303) — a violated contract means padding corrupts chained state;
+  * `vmem_bytes` honesty: the model must bound the operand tiles the
+    `TileModel` declares (TB304 when it underestimates — dispatch would
+    green-light a block shape that blows VMEM — and TB305 when it is so
+    loose the autotuner prunes everything);
+  * the default blocks must fit `REPRO_VMEM_LIMIT_MB` at the spec's
+    canonical dims (TB306);
+  * candidate/tuning-cache block keys must name real axes (TB308);
+  * the block-sparse spikemm channel's compacted table must be a faithful
+    permutation of the occupancy bitmap, sentinels included (TB307).
+
+Everything here is pure Python/numpy over spec metadata — no tracing, no
+Pallas, no TPU.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels import registry, tuning
+
+from repro.analysis.diagnostics import Diagnostic, make
+
+# tuning-cache kernel keys that are policies, not registered kernels
+_PSEUDO_KERNEL_PREFIXES = ("spikemm.sparse_th",)
+
+
+# ---------------------------------------------------------------------------
+# coverage painting
+# ---------------------------------------------------------------------------
+
+
+def _default_cells(tm: "registry.TileModel", dims: Mapping[str, int],
+                   blocks: Mapping[str, int]
+                   ) -> Iterable[Tuple[Tuple[int, int], ...]]:
+    """The dense row-major tiling implied by `TileModel.out`."""
+    per_axis: List[List[Tuple[int, int]]] = []
+    for dim, axis in tm.out:
+        size = int(dims[dim])
+        if axis is None:
+            per_axis.append([(0, size)])
+            continue
+        b = int(blocks[axis])
+        per_axis.append([(i * b, min((i + 1) * b, size))
+                         for i in range(max(1, -(-size // b)))])
+    idx = [0] * len(per_axis)
+    while True:
+        yield tuple(per_axis[a][idx[a]] for a in range(len(per_axis)))
+        for a in reversed(range(len(per_axis))):
+            idx[a] += 1
+            if idx[a] < len(per_axis[a]):
+                break
+            idx[a] = 0
+        else:
+            return
+
+
+def coverage_problems(tm: "registry.TileModel", dims: Mapping[str, int],
+                      blocks: Mapping[str, int]) -> List[str]:
+    """Paint every grid cell onto the output; report gaps and overlaps."""
+    sizes = tuple(int(dims[dim]) for dim, _ in tm.out)
+    paint = np.zeros(sizes, dtype=np.int16)
+    cells = (tm.coverage(dims, blocks) if tm.coverage is not None
+             else _default_cells(tm, dims, blocks))
+    for cell in cells:
+        paint[tuple(slice(lo, hi) for lo, hi in cell)] += 1
+    problems: List[str] = []
+    gaps = int((paint == 0).sum())
+    overlaps = int((paint > 1).sum())
+    if gaps:
+        first = np.argwhere(paint == 0)[0]
+        problems.append(
+            f"gap: {gaps} output element(s) never written "
+            f"(first at {tuple(int(i) for i in first)})")
+    if overlaps:
+        first = np.argwhere(paint > 1)[0]
+        problems.append(
+            f"overlap: {overlaps} output element(s) written more than once "
+            f"(first at {tuple(int(i) for i in first)})")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# sparse block-table verification
+# ---------------------------------------------------------------------------
+
+
+def check_block_table(flags: Any, ii: Any, kk: Any, active: Any) -> List[str]:
+    """Verify a `compact_blocks` table against its occupancy bitmap.
+
+    Contract: active entries enumerate each occupied block exactly once,
+    row-major; every row block appears (silent rows via an inactive
+    sentinel) so the kernel's output-revisit accounting initializes every
+    output block; inactive padding may only trail, pointing at the last
+    row. Returns a list of violations (empty = faithful).
+    """
+    flags = np.asarray(flags)
+    ii = np.asarray(ii)
+    kk = np.asarray(kk)
+    active = np.asarray(active)
+    Mb, Kb = flags.shape
+    problems: List[str] = []
+    if not (ii.shape == kk.shape == active.shape) or ii.ndim != 1:
+        return [f"table arrays disagree on shape: ii{ii.shape} kk{kk.shape} "
+                f"active{active.shape}"]
+    if np.any((ii < 0) | (ii >= Mb)):
+        problems.append(f"row index out of range [0, {Mb})")
+    act = active != 0
+    if np.any(act & ((kk < 0) | (kk >= Kb))):
+        problems.append(f"active column index out of range [0, {Kb})")
+    if np.any(np.diff(ii) < 0):
+        problems.append("row indices not non-decreasing (breaks the "
+                        "same-row output accumulation)")
+    occ = flags != 0
+    seen = np.zeros((Mb, Kb), dtype=np.int64)
+    for i, k, a in zip(ii, kk, act):
+        if a and 0 <= i < Mb and 0 <= k < Kb:
+            seen[i, k] += 1
+    dup = np.argwhere(seen > 1)
+    if dup.size:
+        problems.append(f"occupied block visited twice (first at "
+                        f"{tuple(int(x) for x in dup[0])})")
+    missed = np.argwhere(occ & (seen == 0))
+    if missed.size:
+        problems.append(f"occupied block never visited (first at "
+                        f"{tuple(int(x) for x in missed[0])})")
+    ghost = np.argwhere((~occ) & (seen > 0))
+    if ghost.size:
+        problems.append(f"active entry at a silent block (first at "
+                        f"{tuple(int(x) for x in ghost[0])})")
+    rows = set(int(i) for i in ii[(ii >= 0) & (ii < Mb)])
+    missing_rows = sorted(set(range(Mb)) - rows)
+    if missing_rows:
+        problems.append(f"row block(s) {missing_rows} absent from the table "
+                        "(their output tiles are never initialized)")
+    return problems
+
+
+def _block_flags(raster: np.ndarray, bm: int, bk: int) -> np.ndarray:
+    M, K = raster.shape
+    return (raster.reshape(M // bm, bm, K // bk, bk)
+            .any(axis=(1, 3)).astype(np.int32))
+
+
+def _check_sparse_channel(site: str) -> List[Diagnostic]:
+    """TB307 over representative occupancy patterns (concrete path)."""
+    import jax.numpy as jnp
+    from repro.kernels.spikemm import sparse
+
+    out: List[Diagnostic] = []
+    bm, bk = 128, 512
+    M, K = 4 * bm, 2 * bk
+    rng = np.random.default_rng(0)
+    rasters = {
+        "all-silent": np.zeros((M, K), np.float32),
+        "all-dense": np.ones((M, K), np.float32),
+        "random-p0.1": (rng.random((M, K)) < 0.1).astype(np.float32),
+        "silent-middle-row": np.ones((M, K), np.float32),
+    }
+    rasters["silent-middle-row"][bm:2 * bm, :] = 0.0
+    for label, raster in rasters.items():
+        flags = _block_flags(raster, bm, bk)
+        ii, kk, active = sparse.compact_blocks(jnp.asarray(flags))
+        for problem in check_block_table(flags, ii, kk, active):
+            out.append(make(
+                "TB307", f"{site}.sparse[{label}]", problem,
+                hint="compact_blocks must enumerate occupied blocks "
+                     "row-major with per-row sentinels"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-spec checks
+# ---------------------------------------------------------------------------
+
+
+def _tile_bytes(tiles: Mapping[str, Tuple[int, ...]]) -> int:
+    return 4 * sum(int(math.prod(shape)) for shape in tiles.values())
+
+
+def check_kernel(name: str) -> List[Diagnostic]:
+    """TB301-309 for one registered kernel family."""
+    import jax
+
+    spec = registry.get(name)
+    out: List[Diagnostic] = []
+    axis_names = {ax.name for ax in spec.block_axes}
+
+    # static contracts on the axes themselves
+    for ax in spec.block_axes:
+        if ax.preferred % ax.align:
+            out.append(make(
+                "TB303", f"{name}.{ax.name}",
+                f"preferred={ax.preferred} is not a multiple of "
+                f"align={ax.align}"))
+
+    # candidate / tuning-cache keys must name real axes
+    for i, cand in enumerate(spec.candidates):
+        unknown = sorted(set(cand) - axis_names)
+        if unknown:
+            out.append(make(
+                "TB308", f"{name}.candidates[{i}]",
+                f"override keys {unknown} match no block axis "
+                f"{sorted(axis_names)}"))
+    for cache, origin in ((tuning.default_cache(), "local"),
+                          (tuning.bundled_cache(), "bundled")):
+        try:
+            entries = list(cache.entries())
+        except Exception:
+            continue  # a corrupt cache is dispatch's problem, not ours
+        for kernel, backend, bucket, blocks in entries:
+            if kernel != name:
+                continue
+            unknown = sorted(set(blocks) - axis_names)
+            if unknown:
+                out.append(make(
+                    "TB308", f"{name}@{origin}:{backend}|{bucket}",
+                    f"cached block keys {unknown} match no block axis "
+                    f"{sorted(axis_names)}",
+                    hint="stale cache entry from a renamed axis; retune"))
+
+    if spec.make_inputs is None:
+        return out
+    args = spec.make_inputs(jax.random.PRNGKey(0))
+    dims = spec.dims_of(*args)
+    tm = spec.tile_model
+    if tm is None:
+        out.append(make(
+            "TB309", name, "spec declares no TileModel: coverage and "
+            "vmem-honesty checks are skipped",
+            hint="add tile_model= to the KernelSpec registration"))
+
+    limit = tuning.vmem_limit_bytes()
+    shapes: List[Tuple[str, Dict[str, int]]] = [
+        ("default", spec.resolve_blocks(dims, use_cache=False))]
+    shapes += [(f"candidates[{i}]",
+                spec.resolve_blocks(dims, overrides=c, use_cache=False))
+               for i, c in enumerate(spec.candidates)]
+    for label, blocks in shapes:
+        site = f"{name}.{label}"
+        for ax in spec.block_axes:
+            b = blocks[ax.name]
+            if ax.exact and dims[ax.dim] % b:
+                out.append(make(
+                    "TB303", site,
+                    f"exact axis {ax.name}: block {b} does not divide "
+                    f"{ax.dim}={dims[ax.dim]} (padding would corrupt the "
+                    "chained state)"))
+            elif not ax.exact and b % ax.align:
+                out.append(make(
+                    "TB303", site,
+                    f"axis {ax.name}: block {b} is not a multiple of "
+                    f"align={ax.align}"))
+        if tm is None:
+            continue
+        for problem in coverage_problems(tm, dims, blocks):
+            code = "TB302" if problem.startswith("overlap") else "TB301"
+            out.append(make(code, site, problem))
+        tiles = tm.tiles(dims, blocks)
+        need = _tile_bytes(tiles)
+        if spec.vmem_bytes is not None:
+            model = int(spec.vmem_bytes(dims, blocks))
+            if model < need:
+                out.append(make(
+                    "TB304", site,
+                    f"vmem model claims {model} B but the declared operand "
+                    f"tiles need {need} B: dispatch would green-light an "
+                    "over-budget block shape"))
+            elif need and model > 8 * need:
+                out.append(make(
+                    "TB305", site,
+                    f"vmem model claims {model} B vs {need} B of declared "
+                    "tiles (>8x): the autotuner will prune viable shapes"))
+            if label == "default" and model > limit:
+                out.append(make(
+                    "TB306", site,
+                    f"default blocks {blocks} model {model / 2**20:.1f} MiB "
+                    f"> budget {limit / 2**20:.1f} MiB at the canonical "
+                    f"dims {dims}: dispatch degrades before tuning ever "
+                    "runs"))
+
+    if "sparse" in spec.channels:
+        out.extend(_check_sparse_channel(name))
+    return out
+
+
+def check_kernels(names: Optional[Sequence[str]] = None) -> List[Diagnostic]:
+    """TB3xx across the registry (default: every registered family)."""
+    registry.ensure_registered()
+    out: List[Diagnostic] = []
+    known = set(registry.names())
+    for name in (names if names is not None else sorted(known)):
+        out.extend(check_kernel(name))
+    if names is None:
+        # cache entries pointing at kernels nobody registers anymore
+        for cache, origin in ((tuning.default_cache(), "local"),
+                              (tuning.bundled_cache(), "bundled")):
+            try:
+                entries = list(cache.entries())
+            except Exception:
+                continue
+            for kernel, backend, bucket, _ in entries:
+                if kernel in known or kernel.startswith(
+                        _PSEUDO_KERNEL_PREFIXES):
+                    continue
+                out.append(make(
+                    "TB308", f"{origin}:{kernel}|{backend}|{bucket}",
+                    "tuning-cache entry references an unregistered kernel",
+                    hint="renamed family? drop or retune the entry"))
+    return out
+
+
+__all__ = ["check_kernel", "check_kernels", "check_block_table",
+           "coverage_problems"]

@@ -1,0 +1,141 @@
+"""TB4xx: placement/mapping validation (core/mapping.py artifacts).
+
+Validates what the mapping compiler emits against the chip model it
+claims to target: per-core neuron budgets under fan-in expansion
+(TB401), complete op coverage (TB402), on-grid placement (TB403),
+physically satisfiable fan-in (TB404), and the NoC link budget (TB405).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import mapping as mp
+
+from repro.analysis.diagnostics import Diagnostic, make
+
+
+def check_cores(cores: Sequence[mp.CoreAssignment], ops: Sequence[mp.Op],
+                core_neurons: int = mp.CORE_NEURONS,
+                core_fanin: int = mp.CORE_FANIN) -> List[Diagnostic]:
+    """TB401/402/404 over a core assignment (pre-placement)."""
+    out: List[Diagnostic] = []
+    by_name = {o.name: o for o in ops}
+
+    for o in ops:
+        # TB404: fan-in so large even a whole core of PSUM parts can't host
+        # one neuron (parts + 1 spiking slot must fit core_neurons)
+        parts = max(1, math.ceil(o.fan_in / core_fanin))
+        if o.kind not in ("add",) and parts > core_neurons:
+            out.append(make(
+                "TB404", o.name,
+                f"fan_in={o.fan_in} needs {parts} PSUM parts per neuron "
+                f"> {core_neurons} slots per core",
+                hint="split the operator (channel groups) before mapping"))
+
+    # TB401: charged load over budget (merge_cores loses ranges for merged
+    # ops, so the charged check applies to each core's primary op + the
+    # open-slot invariant merge_cores maintains is re-checked via sizes)
+    for idx, c in enumerate(cores):
+        o = by_name.get(c.op)
+        if o is None:
+            continue
+        parts = max(1, math.ceil(o.fan_in / core_fanin))
+        load = (c.neuron_hi - c.neuron_lo) * parts
+        if load > core_neurons:
+            out.append(make(
+                "TB401", f"core[{idx}]:{c.op}",
+                f"neurons [{c.neuron_lo}, {c.neuron_hi}) x {parts} PSUM "
+                f"part(s) = {load} slots > {core_neurons} per core"))
+        if c.neuron_hi < c.neuron_lo or c.neuron_lo < 0:
+            out.append(make(
+                "TB401", f"core[{idx}]:{c.op}",
+                f"degenerate neuron range [{c.neuron_lo}, {c.neuron_hi})"))
+
+    # TB402: every real op appears somewhere; primary-only ops must cover
+    # their full neuron range (merged placements lose ranges by design)
+    primary: Dict[str, List[Tuple[int, int]]] = {}
+    mentioned = set()
+    for c in cores:
+        primary.setdefault(c.op, []).append((c.neuron_lo, c.neuron_hi))
+        mentioned.add(c.op)
+        mentioned.update(c.merged_with)
+    for o in ops:
+        if o.kind in ("add",) or o.n_neurons <= 0:
+            continue  # adds fuse into their destination cores
+        if o.name not in mentioned:
+            out.append(make(
+                "TB402", o.name,
+                f"{o.n_neurons} neuron(s) assigned to no core"))
+            continue
+        ranges = sorted(primary.get(o.name, []))
+        if ranges and o.name not in {
+                m for c in cores for m in c.merged_with}:
+            covered = 0
+            cursor = 0
+            for lo, hi in ranges:
+                if lo > cursor:
+                    break
+                covered = max(covered, hi)
+                cursor = max(cursor, hi)
+            if covered < o.n_neurons:
+                out.append(make(
+                    "TB402", o.name,
+                    f"cores cover neurons [0, {covered}) of "
+                    f"{o.n_neurons}: range has holes or is truncated"))
+    return out
+
+
+def _fanout_per_neuron(ops: Sequence[mp.Op]) -> Dict[str, float]:
+    """Average downstream synapse slots each source neuron must drive."""
+    demand: Dict[str, float] = {o.name: 0.0 for o in ops}
+    for q in ops:
+        if not q.inputs:
+            continue
+        share = (q.n_neurons * q.fan_in) / len(q.inputs)
+        for src in q.inputs:
+            if src in demand:
+                demand[src] += share
+    return {name: demand[name] / o.n_neurons
+            for name, o in ((o.name, o) for o in ops) if o.n_neurons > 0}
+
+
+def check_mapping(mapping: mp.Mapping, ops: Sequence[mp.Op],
+                  grid: Tuple[int, int] = mp.GRID,
+                  core_neurons: int = mp.CORE_NEURONS,
+                  core_fanin: int = mp.CORE_FANIN,
+                  link_fanout: Optional[int] = None) -> List[Diagnostic]:
+    """TB401-405 over a compiled Mapping (cores + positions)."""
+    out = check_cores(mapping.cores, ops, core_neurons, core_fanin)
+    H, W = grid
+    pos = mapping.positions
+    n_cores = len(mapping.cores)
+    if pos is None or len(pos) != n_cores:
+        out.append(make(
+            "TB403", "positions",
+            f"{0 if pos is None else len(pos)} position(s) for "
+            f"{n_cores} core(s)"))
+    else:
+        cap = H * W * mp.NCS_PER_CC
+        n_chips = max(1, math.ceil(n_cores / cap))
+        for idx, (y, x) in enumerate(pos):
+            if not (0 <= y < H and 0 <= x < W * n_chips):
+                out.append(make(
+                    "TB403", f"core[{idx}]:{mapping.cores[idx].op}",
+                    f"placed at (y={int(y)}, x={int(x)}) outside the "
+                    f"{H}x{W} grid across {n_chips} chip(s)"))
+
+    budget = mp.LINK_FANOUT if link_fanout is None else link_fanout
+    for name, fanout in sorted(_fanout_per_neuron(ops).items()):
+        if fanout > budget:
+            out.append(make(
+                "TB405", name,
+                f"each source neuron drives ~{fanout:.0f} downstream "
+                f"synapses > link budget {budget}",
+                hint="multicast trees or axon replication needed; expect "
+                     "NoC congestion at this fanout"))
+    return out
+
+
+__all__ = ["check_cores", "check_mapping"]

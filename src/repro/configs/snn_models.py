@@ -17,7 +17,7 @@ FCs type-2, residual skips the delayed-fire scheme).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -30,6 +30,11 @@ CORE_NEURONS = 256            # neurons per NC (264K / 1056 NCs)
 CORE_FANIN = 2048             # max fan-ins per neuron
 GRID = (11, 12)               # CC array (132 CCs x 8 NCs)
 NCS_PER_CC = 8
+# Per-source-neuron fanout budget for the NoC link model: one CC's worth
+# of downstream synapse slots. `repro.analysis.check_mapping` (TB405)
+# flags sources whose average downstream synapse count per neuron exceeds
+# it — the multicast the mesh would have to carry every timestep.
+LINK_FANOUT = CORE_FANIN * NCS_PER_CC
 
 
 @dataclasses.dataclass

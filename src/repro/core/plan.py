@@ -64,10 +64,19 @@ reads a *later* node (previous-timestep semantics) compiles to a single
 whole-program fallback segment, i.e. exactly `events.run`. Every Program
 runs; fusable ones run fast.
 
+Every fallback decision carries a stable TB2xx diagnostic code next to
+its prose reason (`Segment.codes` / `PlasticLower.code`), so
+`Plan.describe()` is machine-checkable and `repro.analysis` can explain
+fusion without re-deriving the classifier.
+
 Env knobs: REPRO_SNN_ENGINE = plan | stepper | auto (auto = plan; set
 `stepper` to force the interpreted engine, e.g. when bisecting a numerics
 difference). REPRO_SNN_EXPLAIN=1 prints every compiled segment schedule
-(`Plan.describe()`) as Programs are lowered. REPRO_FAULTS injects
+(`Plan.describe()`) as Programs are lowered. REPRO_CHECK = off | warn |
+raise runs the full `repro.analysis` checker over each compiled Program:
+`warn` routes warning+ findings onto the kernel incident log
+(kind="check"), `raise` turns error-severity findings into
+`analysis.DiagnosticError`. REPRO_FAULTS injects
 deterministic faults at the run boundary and node outputs
 (`core/faults.py`); REPRO_GUARD (or `run(guard=...)`) arms the numerical
 guardrails (`core/guards.py`).
@@ -84,6 +93,9 @@ import jax.numpy as jnp
 
 from repro.core import events, faults, guards, plasticity
 from repro.core.neuron import Decay, NeuronProgram
+# note: `repro.kernels` re-exports an `incidents()` *function*, which
+# shadows the submodule on the package namespace — import names directly
+from repro.kernels.incidents import FallbackEvent, record as _record_incident
 from repro.kernels.alifrec.ops import alif_scan, alifrec_scan
 from repro.kernels.lif.ops import lif_scan
 from repro.kernels.lifrec.ops import lifrec_scan
@@ -107,12 +119,34 @@ LOWER_DHLIF = "dhlif"
 SYN_SEQ = "stdp_seq"
 SYN_STEP = "step"
 
+# Cross-engine agreement tolerance (fused plan vs stepper, jit vs eager).
+#
+# Root cause of the ~1e-6 DH-LIF membrane drift (CHANGES.md PR 7 note):
+# the fused path evaluates the membrane DIFF through
+# `jax.lax.associative_scan` (linrec), a fp32 *tree* reduction, while the
+# stepper folds the same recurrence *sequentially*; fp32 addition is not
+# associative, so the two orders accumulate different roundoff. Measured
+# at T=1301 (the ECG window): 9.5e-7 max drift with a constant decay,
+# 1.4e-6 with heterogeneous per-neuron decays (0.88..0.997). Reordering
+# either side would cost the scan its O(log T) depth, so the bound is
+# encoded here instead: ~7x margin over the worst observed drift. Use
+# this constant — not ad-hoc atol literals — whenever comparing engines.
+CROSS_ENGINE_ATOL = 1e-5
+
 
 def engine_mode() -> str:
     mode = os.environ.get("REPRO_SNN_ENGINE", "auto")
     if mode not in ("auto", "plan", "stepper"):
         raise ValueError(f"REPRO_SNN_ENGINE={mode!r}: "
                          "expected 'plan', 'stepper', or 'auto'")
+    return mode
+
+
+def check_mode() -> str:
+    mode = os.environ.get("REPRO_CHECK", "off")
+    if mode not in ("off", "warn", "raise"):
+        raise ValueError(f"REPRO_CHECK={mode!r}: "
+                         "expected 'off', 'warn', or 'raise'")
     return mode
 
 
@@ -124,6 +158,7 @@ class Segment:
     names: Tuple[str, ...]     # node names (fused segments hold exactly one)
     reason: str = ""           # why the planner fell back (diagnostics)
     lower: str = ""            # FIRE kernel family for fused segments
+    codes: Tuple[str, ...] = ()  # TB2xx codes, one per merged fallback node
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +169,7 @@ class PlasticLower:
     conn: str                  # Connection.key
     lower: str                 # stdp_seq | step
     reason: str = ""           # why the fused family was refused
+    code: str = ""             # TB2xx code for a refused fused lowering
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,6 +182,8 @@ class Plan:
         return all(s.kind == FALLBACK for s in self.segments)
 
     def describe(self) -> str:
+        """Segment schedule, with every fallback's TB-code inline — the
+        machine-readable why behind each stepper segment."""
         parts = []
         for s in self.segments:
             tag = f"{s.kind}[{','.join(s.names)}]"
@@ -160,7 +198,8 @@ class Plan:
             for p in self.plastic:
                 tag = f"{p.node}.{p.conn}:{p.lower}"
                 if p.reason:
-                    tag += f"({p.reason})"
+                    tag += f"({p.code}: {p.reason})" if p.code \
+                        else f"({p.reason})"
                 learns.append(tag)
             out += " | learn " + ",".join(learns)
         return out
@@ -175,40 +214,42 @@ def _hoist_tag(node: events.LayerNode) -> Optional[str]:
     return getattr(node.integrate, "hoist", None)
 
 
-def _match_fire_pattern(prog: NeuronProgram) -> Tuple[Optional[str], str]:
+def _match_fire_pattern(prog: NeuronProgram
+                        ) -> Tuple[Optional[str], str, str]:
     """Structurally match a NeuronProgram against the fused FIRE kernels.
 
-    Returns (lowering family, "") on a match, else (None, reason). Driven
-    ONLY by program structure — any user program with a matching shape
-    (<= 2 coupled linear states + threshold + zero/subtract reset, or a
-    pure leaky integrator) fuses, whatever Python class built it.
+    Returns (lowering family, "", "") on a match, else
+    (None, TB-code, reason). Driven ONLY by program structure — any user
+    program with a matching shape (<= 2 coupled linear states + threshold
+    + zero/subtract reset, or a pure leaky integrator) fuses, whatever
+    Python class built it.
     """
     th = prog.threshold
     if not prog.states:
-        return None, "empty program"
+        return None, "TB206", "empty program"
     if th is None:
         sv = prog.states[0]
         if (len(prog.states) == 1 and not sv.branch
                 and sv.drive == "current" and prog.output == sv.name):
-            return LOWER_LI, ""
-        return None, "unfusable non-spiking program"
+            return LOWER_LI, "", ""
+        return None, "TB206", "unfusable non-spiking program"
     if prog.output != "spikes":
-        return None, "state readout on a spiking program"
+        return None, "TB206", "state readout on a spiking program"
     if prog.reset not in ("zero", "subtract"):
-        return None, f"reset={prog.reset}"
+        return None, "TB206", f"reset={prog.reset}"
     mem = next((s for s in prog.states if s.name == th.on), None)
     if mem is None or mem.branch:
-        return None, "threshold not on a plain membrane state"
+        return None, "TB206", "threshold not on a plain membrane state"
     others = [s for s in prog.states if s.name != th.on]
     if mem.drive == "current" and not others and not th.adapt:
-        return LOWER_LIF, ""
+        return LOWER_LIF, "", ""
     if prog.reset != "zero":
         # the alif/dhlif kernels implement the hard reset only
-        return None, "subtract reset on a multi-state program"
+        return None, "TB206", "subtract reset on a multi-state program"
     if (mem.drive == "current" and len(others) == 1
             and others[0].drive == "spikes" and not others[0].branch
             and th.adapt == others[0].name):
-        return LOWER_ALIF, ""
+        return LOWER_ALIF, "", ""
     if (len(others) == 1 and others[0].branch
             and others[0].drive == "current"
             and mem.drive == f"sum:{others[0].name}" and not th.adapt):
@@ -216,73 +257,76 @@ def _match_fire_pattern(prog: NeuronProgram) -> Tuple[Optional[str], str]:
         # interpreter's semantics only when the branch state updates first
         names = [s.name for s in prog.states]
         if names.index(others[0].name) < names.index(mem.name):
-            return LOWER_DHLIF, ""
-        return None, "soma declared before its branches"
-    return None, "program shape matches no fused FIRE kernel"
+            return LOWER_DHLIF, "", ""
+        return None, "TB206", "soma declared before its branches"
+    return None, "TB206", "program shape matches no fused FIRE kernel"
 
 
 def _match_synapse_pattern(prog: "plasticity.SynapseProgram"
-                           ) -> Tuple[str, str]:
+                           ) -> Tuple[str, str, str]:
     """Structurally match a SynapseProgram against the `stdp_seq` family.
 
-    -> (SYN_SEQ, "") when every trace decay is a constant (the trace DIFFs
-    then hoist through `linrec` and the update terms run in one
+    -> (SYN_SEQ, "", "") when every trace decay is a constant (the trace
+    DIFFs then hoist through `linrec` and the update terms run in one
     VMEM-resident window over the weight tile) and the program is small
-    enough for the fused plane stack; else (SYN_STEP, reason) — the
-    per-step interpreter over the realized spike trains, always correct.
+    enough for the fused plane stack; else (SYN_STEP, TB-code, reason) —
+    the per-step interpreter over the realized spike trains, always
+    correct.
     """
     if any(t.decay.kind != "const" for t in prog.traces):
-        return SYN_STEP, "learned trace decay"
+        return SYN_STEP, "TB210", "learned trace decay"
     if len(prog.traces) > 4:
-        return SYN_STEP, f"{len(prog.traces)} traces"
+        return SYN_STEP, "TB210", f"{len(prog.traces)} traces"
     if len(prog.terms) > 4:
-        return SYN_STEP, f"{len(prog.terms)} update terms"
-    return SYN_SEQ, ""
+        return SYN_STEP, "TB210", f"{len(prog.terms)} update terms"
+    return SYN_SEQ, "", ""
 
 
 def _classify(node: events.LayerNode, order: Dict[str, int]
-              ) -> Tuple[str, str, str]:
-    """-> (segment kind, fallback reason, lowering family)."""
+              ) -> Tuple[str, str, str, str]:
+    """-> (segment kind, TB-code, fallback reason, lowering family)."""
     hoist = _hoist_tag(node)
     if hoist not in ("ff", "branch"):
-        return FALLBACK, "integrate not hoistable", ""
+        return FALLBACK, "TB202", "integrate not hoistable", ""
     n_self = 0
     for c in node.connections:
         if c.src == "self":
             if c.delay:
-                return FALLBACK, "delayed self", ""
+                return FALLBACK, "TB203", "delayed self", ""
             n_self += 1
         elif c.src != "input" and order[c.src] >= order[node.name]:
             # previous-timestep read of a later node: handled by caller
             # (whole-program fallback); unreachable here, kept for safety
-            return FALLBACK, "back reference", ""
+            return FALLBACK, "TB201", "back reference", ""
     if n_self > 1:
-        return FALLBACK, "multiple self feeds", ""
+        return FALLBACK, "TB204", "multiple self feeds", ""
     try:
         prog = node.neuron.program
     except NotImplementedError:
-        return FALLBACK, "neuron declares no program", ""
-    family, why = _match_fire_pattern(prog)
+        return FALLBACK, "TB205", "neuron declares no program", ""
+    family, code, why = _match_fire_pattern(prog)
     if family is None:
-        return FALLBACK, why, ""
+        return FALLBACK, code, why, ""
     needs_branch = family == LOWER_DHLIF
     if needs_branch != (hoist == "branch"):
-        return FALLBACK, (f"{family} program needs "
-                          f"{'branch' if needs_branch else 'ff'} integrate, "
-                          f"got {hoist}"), ""
+        return FALLBACK, "TB207", (
+            f"{family} program needs "
+            f"{'branch' if needs_branch else 'ff'} integrate, "
+            f"got {hoist}"), ""
     if hoist == "branch":
         n_feeds = sum(1 for c in node.connections if c.src != "self")
         if n_feeds != 1:
             # the branch convention hoists exactly one feed through w_input;
             # extra feeds would be silently dropped
-            return FALLBACK, f"branch integrate with {n_feeds} feeds", ""
+            return FALLBACK, "TB207", \
+                f"branch integrate with {n_feeds} feeds", ""
     if n_self:
         if family == LOWER_LIF and prog.reset != "zero":
-            return FALLBACK, "recurrent subtract reset", ""
+            return FALLBACK, "TB208", "recurrent subtract reset", ""
         if family in (LOWER_LIF, LOWER_ALIF):
-            return FUSED_REC, "", family
-        return FALLBACK, f"recurrent {family}", ""
-    return FUSED_FF, "", family
+            return FUSED_REC, "", "", family
+        return FALLBACK, "TB208", f"recurrent {family}", ""
+    return FUSED_FF, "", "", family
 
 
 def compile_program(nodes: List[events.LayerNode]) -> Plan:
@@ -293,8 +337,8 @@ def compile_program(nodes: List[events.LayerNode]) -> Plan:
         for c in n.connections:
             if c.plastic is None:
                 continue
-            lower, why = _match_synapse_pattern(c.plastic)
-            plastic.append(PlasticLower(n.name, c.key, lower, why))
+            lower, code, why = _match_synapse_pattern(c.plastic)
+            plastic.append(PlasticLower(n.name, c.key, lower, why, code))
 
     # Any previous-timestep read of a later node couples the whole Program
     # per-timestep: compile to one stepper segment (exactly events.run).
@@ -302,9 +346,10 @@ def compile_program(nodes: List[events.LayerNode]) -> Plan:
     for n in nodes:
         for c in n.connections:
             if c.src not in ("input", "self") and order[c.src] >= order[n.name]:
-                plan = Plan((Segment(FALLBACK, tuple(x.name for x in nodes),
-                                     f"{n.name} reads later node {c.src}"),),
-                            tuple(plastic))
+                plan = Plan((Segment(
+                    FALLBACK, tuple(x.name for x in nodes),
+                    f"{n.name}: TB201 reads later node {c.src}",
+                    codes=("TB201",)),), tuple(plastic))
                 break
         if plan:
             break
@@ -313,20 +358,24 @@ def compile_program(nodes: List[events.LayerNode]) -> Plan:
         segments: List[Segment] = []
         pending_fallback: List[str] = []
         pending_reason = ""
+        pending_codes: List[str] = []
 
         def flush():
-            nonlocal pending_fallback, pending_reason
+            nonlocal pending_fallback, pending_reason, pending_codes
             if pending_fallback:
                 segments.append(Segment(FALLBACK, tuple(pending_fallback),
-                                        pending_reason))
+                                        pending_reason,
+                                        codes=tuple(pending_codes)))
                 pending_fallback, pending_reason = [], ""
+                pending_codes = []
 
         for n in nodes:
-            kind, reason, family = _classify(n, order)
+            kind, code, reason, family = _classify(n, order)
             if kind == FALLBACK:
                 pending_fallback.append(n.name)
+                pending_codes.append(code)
                 pending_reason = (pending_reason + "; " if pending_reason
-                                  else "") + f"{n.name}: {reason}"
+                                  else "") + f"{n.name}: {code} {reason}"
             else:
                 flush()
                 segments.append(Segment(kind, (n.name,), lower=family))
@@ -335,7 +384,40 @@ def compile_program(nodes: List[events.LayerNode]) -> Plan:
 
     if os.environ.get("REPRO_SNN_EXPLAIN") == "1":
         print(f"[repro.plan] {plan.describe()}")
+    _run_check_hook(nodes, plan)
     return plan
+
+
+# Re-entrancy latch for the REPRO_CHECK hook: `analysis.check_nodes` may
+# itself call `compile_program` (it reuses the planner for TB2xx), which
+# must not re-trigger the hook.
+_IN_CHECK = False
+
+
+def _run_check_hook(nodes: List[events.LayerNode], plan: "Plan") -> None:
+    """Opt-in static checking at compile time (REPRO_CHECK=warn|raise).
+
+    warn: warning+ findings land on the kernel incident log (kind="check")
+    — observable, never fatal, and deliberately record()ed rather than
+    degrade()d so REPRO_STRICT CI stays green. raise: error-severity
+    findings abort compilation with `analysis.DiagnosticError`.
+    """
+    global _IN_CHECK
+    mode = check_mode()
+    if mode == "off" or _IN_CHECK:
+        return
+    from repro import analysis  # deferred: analysis imports this module
+    _IN_CHECK = True
+    try:
+        diags = analysis.check_nodes(nodes, plan=plan)
+    finally:
+        _IN_CHECK = False
+    if mode == "raise":
+        analysis.raise_if(diags, "error")
+    for d in analysis.at_least(diags, "warning"):
+        _record_incident(FallbackEvent(
+            kind="check", family="plan", stage=d.code,
+            error=f"{d.site}: {d.message}"))
 
 
 # ---------------------------------------------------------------------------
@@ -773,6 +855,7 @@ def run(nodes: List[events.LayerNode], params: Dict[str, Any], x: Array,
 
 
 __all__ = ["Plan", "PlasticLower", "Segment", "compile_program",
-           "engine_mode", "run", "FUSED_FF", "FUSED_REC", "FALLBACK",
+           "engine_mode", "check_mode", "run", "CROSS_ENGINE_ATOL",
+           "FUSED_FF", "FUSED_REC", "FALLBACK",
            "LOWER_LI", "LOWER_LIF", "LOWER_ALIF", "LOWER_DHLIF",
            "SYN_SEQ", "SYN_STEP"]

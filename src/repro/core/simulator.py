@@ -19,7 +19,7 @@ the paper's §V-B2 protocol ('record the power while the model is running').
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 

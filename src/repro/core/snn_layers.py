@@ -20,16 +20,14 @@ All are built on the events.py INTEG/FIRE engine.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import events
 from repro.core.events import Connection
-from repro.core.neuron import ALIF, DHLIF, LI, LIF, PLIF, locacc
-from repro.core.plasticity import (SynapseProgram, accumulated_spike_fc,
-                                   fuse_bn1d_fc)
+from repro.core.neuron import ALIF, DHLIF, LI, LIF, locacc
+from repro.core.plasticity import SynapseProgram, accumulated_spike_fc
 from repro.kernels.lif.ops import lif_scan
 
 Array = jax.Array

@@ -273,6 +273,15 @@ registry.register(registry.KernelSpec(
     # current + spikes blocks dominate; v/a scratch + init/final + tau/rho
     vmem_bytes=lambda dims, b: 4 * (2 * b["ct"] * b["bb"] * b["bn"]
                                     + 6 * b["bb"] * b["bn"] + 2 * b["bn"]),
+    tile_model=registry.TileModel(
+        out=(("T", "ct"), ("B", "bb"), ("N", "bn")),
+        tiles=lambda dims, b: {
+            "current": (b["ct"], b["bb"], b["bn"]),
+            "spikes_out": (b["ct"], b["bb"], b["bn"]),
+            "v": (b["bb"], b["bn"]), "a": (b["bb"], b["bn"]),
+            "v0": (b["bb"], b["bn"]), "a0": (b["bb"], b["bn"]),
+            "vT": (b["bb"], b["bn"]), "aT": (b["bb"], b["bn"]),
+            "tau": (b["bn"],), "rho": (b["bn"],)}),
 ))
 
 
@@ -299,4 +308,15 @@ registry.register(registry.KernelSpec(
     diff_argnums=(0, 1, 2, 3, 4, 5, 6),
     tol=1e-4,
     vmem_bytes=_alifrec_vmem_bytes,
+    # resident (padded) N axis; only T and B are grid-tiled
+    tile_model=registry.TileModel(
+        out=(("T", "ct"), ("B", "bb"), ("N", None)),
+        tiles=lambda dims, b: (lambda n: {
+            "current": (b["ct"], b["bb"], n),
+            "spikes_out": (b["ct"], b["bb"], n),
+            "w_rec": (n, n),
+            "v": (b["bb"], n), "a": (b["bb"], n), "s": (b["bb"], n),
+            "v0": (b["bb"], n), "a0": (b["bb"], n), "s0": (b["bb"], n),
+            "vT": (b["bb"], n), "aT": (b["bb"], n), "sT": (b["bb"], n),
+            "tau": (n,), "rho": (n,)})(-(-dims["N"] // 128) * 128)),
 ))

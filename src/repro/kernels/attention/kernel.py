@@ -87,8 +87,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_scr, m_scr, l_scr, *,
 
     @pl.when(kj == nk - 1)
     def _():
-        l = l_scr[...][:, :1]
-        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        lsum = l_scr[...][:, :1]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(lsum, 1e-30)).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -108,4 +108,12 @@ registry.register(registry.KernelSpec(
     vmem_bytes=lambda dims, b: 4 * (2 * b["bq"] * dims["d"]
                                     + 2 * b["bk"] * dims["d"]
                                     + b["bq"] * b["bk"] + 3 * b["bq"]),
+    # output is (T, d): the S axis reduces over the k/v loop, d rides whole
+    tile_model=registry.TileModel(
+        out=(("T", "bq"), ("d", None)),
+        tiles=lambda dims, b: {
+            "q": (b["bq"], dims["d"]), "o": (b["bq"], dims["d"]),
+            "k": (b["bk"], dims["d"]), "v": (b["bk"], dims["d"]),
+            "scores": (b["bq"], b["bk"]),
+            "m": (b["bq"],), "l": (b["bq"],), "acc_scale": (b["bq"],)}),
 ))

@@ -153,4 +153,11 @@ registry.register(registry.KernelSpec(
     # current + spikes blocks dominate; v scratch/v0/vT + tau ride along
     vmem_bytes=lambda dims, b: 4 * (2 * b["ct"] * b["bb"] * b["bn"]
                                     + 3 * b["bb"] * b["bn"] + b["bn"]),
+    tile_model=registry.TileModel(
+        out=(("T", "ct"), ("B", "bb"), ("N", "bn")),
+        tiles=lambda dims, b: {
+            "current": (b["ct"], b["bb"], b["bn"]),
+            "spikes_out": (b["ct"], b["bb"], b["bn"]),
+            "v": (b["bb"], b["bn"]), "v0": (b["bb"], b["bn"]),
+            "vT": (b["bb"], b["bn"]), "tau": (b["bn"],)}),
 ))

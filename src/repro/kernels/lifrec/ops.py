@@ -162,4 +162,16 @@ registry.register(registry.KernelSpec(
     diff_argnums=(0, 1, 2, 3, 4),
     tol=1e-4,
     vmem_bytes=_vmem_bytes,
+    # the N axis is VMEM-resident (whole, padded to the 128 lane) — only
+    # T and B are tiled by the grid
+    tile_model=registry.TileModel(
+        out=(("T", "ct"), ("B", "bb"), ("N", None)),
+        tiles=lambda dims, b: (lambda n: {
+            "current": (b["ct"], b["bb"], n),
+            "spikes_out": (b["ct"], b["bb"], n),
+            "w_rec": (n, n),
+            "v": (b["bb"], n), "s": (b["bb"], n),
+            "v0": (b["bb"], n), "s0": (b["bb"], n),
+            "vT": (b["bb"], n), "sT": (b["bb"], n),
+            "tau": (n,)})(-(-dims["N"] // 128) * 128)),
 ))

@@ -108,4 +108,12 @@ registry.register(registry.KernelSpec(
     # a + x in, y out, plus the h carry/h0/hT tiles
     vmem_bytes=lambda dims, b: 4 * (3 * b["ct"] * b["bb"] * b["bd"]
                                     + 3 * b["bb"] * b["bd"]),
+    tile_model=registry.TileModel(
+        out=(("T", "ct"), ("B", "bb"), ("D", "bd")),
+        tiles=lambda dims, b: {
+            "a": (b["ct"], b["bb"], b["bd"]),
+            "x": (b["ct"], b["bb"], b["bd"]),
+            "y": (b["ct"], b["bb"], b["bd"]),
+            "h": (b["bb"], b["bd"]), "h0": (b["bb"], b["bd"]),
+            "hT": (b["bb"], b["bd"])}),
 ))

@@ -155,6 +155,33 @@ class Channel:
 
 
 @dataclasses.dataclass(frozen=True)
+class TileModel:
+    """Static description of a kernel's grid coverage and operand tiles.
+
+    Purely declarative — `repro.analysis.check_kernel` uses it to prove,
+    without tracing, that (a) the grid x index-map writes every output
+    element exactly once (TB301/302) and (b) the `vmem_bytes` estimate is
+    an honest bound on the per-grid-step operand tiles (TB304/305).
+
+    out:   the output tensor's dims in order, each paired with the block
+           axis that tiles it (None = the dim rides whole in every block,
+           e.g. the resident N axis of the recurrent kernels).
+    tiles: (dims, blocks) -> {operand name: per-grid-step tile shape in
+           elements}; fp32 is assumed when converting to bytes.
+    coverage: optional override returning, per grid cell, the per-output-
+           axis (start, stop) half-open ranges. Defaults to the dense
+           row-major tiling implied by `out`; exists so tests can inject
+           gap/overlap defects without a real kernel.
+    """
+
+    out: Tuple[Tuple[str, Optional[str]], ...]
+    tiles: Callable[[Mapping[str, int], Mapping[str, int]],
+                    Mapping[str, Tuple[int, ...]]]
+    coverage: Optional[Callable[[Mapping[str, int], Mapping[str, int]],
+                                Any]] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class KernelSpec:
     """Everything the registry needs to dispatch, tune, and verify a kernel."""
 
@@ -183,6 +210,8 @@ class KernelSpec:
     # (e.g. measure occupancy) but must route conservatively on tracers.
     channels: Mapping[str, Channel] = dataclasses.field(default_factory=dict)
     select_channel: Optional[Callable[..., Optional[str]]] = None
+    # static grid/tile description for the analyzer (see TileModel)
+    tile_model: Optional[TileModel] = None
 
     def resolve_blocks(self, dims: Mapping[str, int],
                        overrides: Optional[Mapping[str, int]] = None,
@@ -346,6 +375,6 @@ def dispatch(name: str, args: Sequence[Any], force_pallas: bool = False,
     return run_ref()
 
 
-__all__ = ["BlockAxis", "Channel", "FallbackError", "KernelSpec", "register",
-           "get", "names", "ensure_registered", "dispatch", "fit_block",
-           "exact_block", "use_pallas", "interpret_mode"]
+__all__ = ["BlockAxis", "Channel", "FallbackError", "KernelSpec", "TileModel",
+           "register", "get", "names", "ensure_registered", "dispatch",
+           "fit_block", "exact_block", "use_pallas", "interpret_mode"]

@@ -222,6 +222,12 @@ registry.register(registry.KernelSpec(
     # spike + weight blocks in, out block + fp32 accumulator
     vmem_bytes=lambda dims, b: 4 * (b["bm"] * b["bk"] + b["bk"] * b["bn"]
                                     + 2 * b["bm"] * b["bn"]),
+    # the K axis is a reduction: it never appears in the output tiling
+    tile_model=registry.TileModel(
+        out=(("M", "bm"), ("N", "bn")),
+        tiles=lambda dims, b: {
+            "spikes": (b["bm"], b["bk"]), "w": (b["bk"], b["bn"]),
+            "acc": (b["bm"], b["bn"]), "out": (b["bm"], b["bn"])}),
     channels={"sparse": registry.Channel(ref=_sparse_ref_impl,
                                          pallas=_sparse_pallas_impl)},
     select_channel=_select_channel,

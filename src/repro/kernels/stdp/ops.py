@@ -122,6 +122,12 @@ registry.register(registry.KernelSpec(
     vmem_bytes=lambda dims, b: 4 * (2 * b["bm"] * b["bn"]
                                     + dims["K"] * dims["TB"]
                                     * (b["bm"] + b["bn"])),
+    tile_model=registry.TileModel(
+        out=(("M", "bm"), ("N", "bn")),
+        tiles=lambda dims, b: {
+            "w": (b["bm"], b["bn"]), "w_out": (b["bm"], b["bn"]),
+            "P": (dims["K"], dims["TB"], b["bm"]),
+            "Q": (dims["K"], dims["TB"], b["bn"])}),
 ))
 
 
@@ -143,4 +149,10 @@ registry.register(registry.KernelSpec(
     # w block in/out + the four (B, block) trace/spike slabs
     vmem_bytes=lambda dims, b: 4 * (2 * b["bm"] * b["bn"]
                                     + 2 * dims["B"] * (b["bm"] + b["bn"])),
+    tile_model=registry.TileModel(
+        out=(("M", "bm"), ("N", "bn")),
+        tiles=lambda dims, b: {
+            "w": (b["bm"], b["bn"]), "w_out": (b["bm"], b["bn"]),
+            "x_pre": (dims["B"], b["bm"]), "s_pre": (dims["B"], b["bm"]),
+            "x_post": (dims["B"], b["bn"]), "s_post": (dims["B"], b["bn"])}),
 ))

@@ -118,6 +118,15 @@ class TuningCache:
         os.replace(tmp, self.path)
         return self.path
 
+    def entries(self):
+        """Iterate (kernel, backend, bucket, blocks) over every cached
+        winner — the static analyzer lints stored block keys against the
+        owning spec's axes (`repro.analysis.check_kernel`, TB308)."""
+        for key, entry in self._load()["entries"].items():
+            kernel, backend, bucket = key.split("|", 2)
+            yield kernel, backend, bucket, {
+                k: int(v) for k, v in entry["blocks"].items()}
+
     def __len__(self) -> int:
         return len(self._load()["entries"])
 

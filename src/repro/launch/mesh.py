@@ -12,7 +12,7 @@ Axis semantics (DESIGN.md §4):
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

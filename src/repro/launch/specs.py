@@ -14,7 +14,6 @@ parameter/optimizer trees come from jax.eval_shape over the real init.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax
@@ -102,7 +101,7 @@ def _ns(mesh, spec_tree, like_tree=None):
     if like_tree is None:
         return jax.tree.map(one, spec_tree,
                             is_leaf=lambda x: isinstance(x, PartitionSpec))
-    return jax.tree.map(lambda s, l: one(s, l), spec_tree, like_tree,
+    return jax.tree.map(lambda s, lk: one(s, lk), spec_tree, like_tree,
                         is_leaf=lambda x: isinstance(x, PartitionSpec))
 
 

@@ -12,7 +12,6 @@ identical (the dry-run proves the full-scale lowering).
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
@@ -23,7 +22,6 @@ from repro.data.tokens import TokenStream
 from repro.models import lm
 from repro.optim.adamw import AdamWConfig
 from repro.optim.schedules import cosine_schedule, wsd_schedule
-from repro.sharding import rules
 from repro.train.loop import TrainLoopConfig, train_loop
 
 

@@ -160,7 +160,7 @@ def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 
     @functools.partial(jax.checkpoint, prevent_cse=False)
     def kv_body(carry, inp, q_i, q_pos):
-        acc, m, l = carry                       # (B,bq,H,hd), (B,H,bq), (B,H,bq)
+        acc, m, lsum = carry                    # (B,bq,H,hd), (B,H,bq), (B,H,bq)
         k_j, v_j, valid_j, j = inp
         kv_pos = j * block_kv + jnp.arange(block_kv)
         s = jnp.einsum("bthd,bshd->bhts", q_i, k_j).astype(jnp.float32) * scale
@@ -169,10 +169,10 @@ def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l = l * corr + jnp.sum(p, axis=-1)
+        lsum = lsum * corr + jnp.sum(p, axis=-1)
         acc = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
             "bhts,bshd->bthd", p.astype(q_i.dtype), v_j).astype(jnp.float32)
-        return (acc, m_new, l), None
+        return (acc, m_new, lsum), None
 
     def q_body(_, inp):
         q_i, i = inp
@@ -182,10 +182,10 @@ def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
         l0 = jnp.zeros((B, H, block_q), jnp.float32)
 
         # causal: skip KV blocks strictly after this Q block's last row.
-        (acc, m, l), _ = jax.lax.scan(
+        (acc, m, lsum), _ = jax.lax.scan(
             functools.partial(kv_body, q_i=q_i, q_pos=q_pos),
             (acc0, m0, l0), (kb, vb, kv_valid, jnp.arange(nk)))
-        out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        out = acc / jnp.maximum(lsum, 1e-30).transpose(0, 2, 1)[..., None]
         return None, out.astype(q_i.dtype)
 
     _, ob = jax.lax.scan(q_body, None, (qb, jnp.arange(nq)))

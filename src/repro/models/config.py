@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 
 def _round_up(x: int, m: int) -> int:

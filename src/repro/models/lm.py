@@ -15,8 +15,7 @@ Batches:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,6 @@ from repro.models import transformer as tf_mod
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.compression import compress_grads
-from repro.sharding.rules import constrain
 
 Array = jax.Array
 
@@ -126,9 +124,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
 
             def acc_body(carry, mb):
                 gsum, lsum = carry
-                (l, m), g = grad_one(params, mb)
+                (lo, m), g = grad_one(params, mb)
                 gsum = jax.tree.map(jnp.add, gsum, g)
-                return (gsum, lsum + l), m
+                return (gsum, lsum + lo), m
 
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
             (gsum, lsum), ms = jax.lax.scan(acc_body, (g0, 0.0), mbs)

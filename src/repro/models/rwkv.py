@@ -27,7 +27,6 @@ import jax.numpy as jnp
 from repro.kernels.linrec import linrec
 from repro.models.blocks import group_norm, truncated_normal
 from repro.models.config import ModelConfig
-from repro.sharding.rules import constrain
 
 Array = jax.Array
 

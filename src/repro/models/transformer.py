@@ -26,7 +26,6 @@ them), indexed by layer position inside the scan.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

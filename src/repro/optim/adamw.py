@@ -27,7 +27,9 @@ class AdamWConfig:
 
 
 def adamw_init(params: Any) -> Dict[str, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return {"mu": jax.tree.map(zeros, params),
             "nu": jax.tree.map(zeros, params),
             "step": jnp.zeros((), jnp.int32)}

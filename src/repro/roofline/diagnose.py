@@ -20,7 +20,7 @@ from repro.configs import ARCH_IDS, shape_adapted_config
 from repro.launch import specs as specs_mod
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import SHAPES
-from repro.roofline.hlo import _COLL_KINDS, _SHAPE_RE, _shape_bytes
+from repro.roofline.hlo import _COLL_KINDS, _shape_bytes
 from repro.sharding import rules
 
 

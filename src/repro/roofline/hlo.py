@@ -18,7 +18,7 @@ class and use the conventional wire estimate per class.
 from __future__ import annotations
 
 import re
-from typing import Dict, List
+from typing import Dict
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,

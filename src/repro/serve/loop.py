@@ -27,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 import random
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,13 +20,12 @@ Bubble fraction: (S-1)/(M+S-1) — the usual GPipe trade; pick M >= 4*S.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 Array = jax.Array
 

@@ -21,10 +21,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Any, Callable, Dict, Iterable, List, Optional
-
-import jax
-import numpy as np
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.train.checkpoint import CheckpointManager
 

@@ -1,0 +1,620 @@
+"""Static-analysis subsystem tests (repro.analysis, TB1xx-TB4xx).
+
+Two directions:
+  * the shipped registry / builtin models / mappings check CLEAN at
+    warning severity (the CI gate `python -m repro.analysis --all
+    --fail-on warning` must stay green);
+  * injected defects produce exactly the documented TB codes — one test
+    per defect class, plus hypothesis property tests that mutate valid
+    random programs/graphs per defect family.
+"""
+
+import contextlib
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import analysis
+from repro.core import mapping as mp
+from repro.core import plan as plan_mod
+from repro.core.events import Connection, LayerNode
+from repro.core.neuron import (LI, LIF, Decay, NeuronProgram, NeuronSpec,
+                               StateVar, Threshold)
+from repro.core.plasticity import (SynapseProgram, TraceVar, UpdateTerm,
+                                   pair_stdp)
+from repro.core.snn_layers import (branch_integrate, ff_integrate,
+                                   make_dhsnn_shd, make_plastic_ff,
+                                   make_srnn_ecg)
+from repro.kernels import registry
+from repro.kernels.incidents import clear as clear_incidents
+from repro.kernels.incidents import incidents as incident_log
+
+KEY = jax.random.PRNGKey(0)
+
+
+def codes_of(diags):
+    return {d.code for d in diags}
+
+
+def _lif(name, srcs, out_dim=8, neuron=None):
+    return LayerNode(name, neuron or LIF(), ff_integrate,
+                     inputs=tuple(srcs), out_dim=out_dim)
+
+
+def _chain(depth, width=8):
+    nodes = [_lif("n0", (Connection("input"),), width)]
+    for i in range(1, depth):
+        nodes.append(_lif(f"n{i}", (Connection(f"n{i - 1}"),), width))
+    return nodes
+
+
+# ---------------------------------------------------------------------------
+# diagnostics plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_make_rejects_unknown_code():
+    with pytest.raises(KeyError):
+        analysis.make("TB999", "x", "nope")
+
+
+def test_severity_ordering_and_worst():
+    ds = [analysis.make("TB201", "a", "info thing"),
+          analysis.make("TB105", "b", "warn thing"),
+          analysis.make("TB110", "c", "err thing")]
+    assert analysis.worst(ds) == "error"
+    ranked = analysis.at_least(ds, "warning")
+    assert [d.code for d in ranked] == ["TB110", "TB105"]
+    assert analysis.at_least(ds, "info") and not analysis.at_least([], "info")
+
+
+def test_raise_if_carries_diagnostics():
+    d = analysis.make("TB110", "site", "boom")
+    with pytest.raises(analysis.DiagnosticError) as ei:
+        analysis.raise_if([d])
+    assert ei.value.diagnostics == (d,)
+    analysis.raise_if([analysis.make("TB105", "s", "warn")])  # below floor
+
+
+def test_render_mentions_code_site_and_hint():
+    txt = analysis.render([analysis.make("TB103", "hid", "cycle",
+                                         hint="add delay=1")])
+    assert "TB103" in txt and "hid" in txt and "add delay=1" in txt
+
+
+def test_every_code_has_a_titled_severity():
+    for code, (sev, title) in analysis.CODES.items():
+        assert sev in analysis.SEVERITIES and title, code
+
+
+def test_polymorphic_check_dispatch():
+    assert analysis.check("lif") == analysis.check_kernel("lif")
+    prog = LIF().program
+    assert analysis.check(prog) == analysis.check_program(prog)
+    nodes = _chain(2)
+    assert codes_of(analysis.check(nodes)) == codes_of(
+        analysis.check_nodes(nodes))
+    with pytest.raises(TypeError):
+        analysis.check(42)
+
+
+# ---------------------------------------------------------------------------
+# the shipped registry / models / mappings check clean (the CI gate)
+# ---------------------------------------------------------------------------
+
+
+def test_registry_checks_clean():
+    diags = analysis.check_kernels()
+    assert not analysis.at_least(diags, "warning"), analysis.render(diags)
+
+
+def test_builtin_models_check_clean():
+    factories = {
+        "srnn_ecg": make_srnn_ecg,
+        "dhsnn_shd": lambda k: make_dhsnn_shd(k, n_in=32, n_hidden=24,
+                                              n_out=8),
+        "plastic_ff": make_plastic_ff,
+    }
+    for name, factory in factories.items():
+        nodes, params = factory(KEY)
+        diags = analysis.check_nodes(nodes, params=params, T=64, B=4)
+        assert not analysis.at_least(diags, "warning"), \
+            f"{name}:\n{analysis.render(diags)}"
+
+
+def test_builtin_mapping_checks_clean():
+    from repro.configs.snn_models import MODELS, to_ops
+    specs, _ = MODELS["plif_net"]()
+    ops = to_ops(specs)
+    ir = mp.fuse_ops([dataclasses.replace(o) for o in ops])
+    cores = mp.partition(ir)
+    bad = analysis.at_least(analysis.check_cores(cores, ir), "error")
+    assert not bad, analysis.render(bad)
+
+
+def test_cli_kernels_json(capsys):
+    from repro.analysis.__main__ import main
+    assert main(["--kernels", "--fail-on", "warning", "--json"]) == 0
+    assert json.loads(capsys.readouterr().out) == []
+
+
+@pytest.mark.slow
+def test_cli_all_gate_is_green():
+    from repro.analysis.__main__ import main
+    assert main(["--all", "--fail-on", "warning"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# TB1xx: injected program / graph defects
+# ---------------------------------------------------------------------------
+
+
+def test_tb100_invalid_program_is_one_finding():
+    prog = NeuronProgram(states=(StateVar("v", Decay("const", 0.9)),),
+                         threshold=Threshold(on="ghost"))
+    diags = analysis.check_program(prog)
+    assert codes_of(diags) == {"TB100"}
+
+
+def test_tb102_duplicate_decay_params():
+    prog = NeuronProgram(
+        states=(StateVar("v", Decay("learned", 0.9, param="tau")),
+                StateVar("u", Decay("learned", 0.8, param="tau"),
+                         drive="spikes")),
+        threshold=Threshold(on="v", adapt="u", scale=0.5))
+    assert "TB102" in codes_of(analysis.check_program(prog))
+
+
+def test_tb105_unread_state():
+    prog = NeuronProgram(
+        states=(StateVar("v", Decay("const", 0.9)),
+                StateVar("shadow", Decay("const", 0.5))),
+        threshold=Threshold())
+    diags = [d for d in analysis.check_program(prog) if d.code == "TB105"]
+    assert len(diags) == 1 and "shadow" in diags[0].site
+
+
+def test_tb108_decay_out_of_range():
+    prog = NeuronProgram(states=(StateVar("v", Decay("const", 1.5)),),
+                         threshold=Threshold())
+    assert "TB108" in codes_of(analysis.check_program(prog))
+
+
+def test_tb109_degenerate_thresholds():
+    flat = NeuronProgram(states=(StateVar("v", Decay("const", 0.9)),),
+                         threshold=Threshold(base=-1.0))
+    assert "TB109" in codes_of(analysis.check_program(flat))
+    noop_adapt = NeuronProgram(
+        states=(StateVar("v", Decay("const", 0.9)),
+                StateVar("a", Decay("const", 0.7), drive="spikes")),
+        threshold=Threshold(base=1.0, adapt="a", scale=0.0))
+    assert "TB109" in codes_of(analysis.check_program(noop_adapt))
+
+
+def test_tb106_unused_trace_and_tb108_trace_decay():
+    sp = SynapseProgram(
+        traces=(TraceVar("x", "pre", Decay("const", 1.5)),),
+        terms=(UpdateTerm(0.01),))
+    got = codes_of(analysis.check_synapse(sp))
+    assert {"TB106", "TB108"} <= got
+
+
+def test_tb101_unknown_source():
+    nodes = _chain(2)[:-1] + [_lif("n1", (Connection("hiden"),), 8)]
+    diags = analysis.check_nodes(nodes)
+    hits = [d for d in diags if d.code == "TB101"]
+    assert hits and "hiden" in hits[0].message
+
+
+def test_tb103_zero_delay_cycle_names_the_loop():
+    nodes = [_lif("a", (Connection("input"), Connection("b")), 8),
+             _lif("b", (Connection("a"),), 8)]
+    hits = [d for d in analysis.check_nodes(nodes) if d.code == "TB103"]
+    assert hits and "a -> b -> a" in hits[0].message
+    assert "delay=1" in hits[0].hint
+
+
+def test_tb104_unreachable_and_dead_nodes():
+    orphan = _lif("orphan", (Connection("self"),), 8)
+    diags = analysis.check_nodes(_chain(2) + [orphan])
+    assert any(d.code == "TB104" and d.site == "orphan" for d in diags)
+    # dead output: feeds nothing, not the terminal node
+    nodes = [_lif("n0", (Connection("input"),), 8),
+             _lif("stub", (Connection("n0"),), 8),
+             _lif("n1", (Connection("n0"),), 8)]
+    diags = analysis.check_nodes(nodes)
+    assert any(d.code == "TB104" and d.site == "stub" for d in diags)
+
+
+def test_tb107_plastic_edge_missing_weight():
+    nodes, params = make_plastic_ff(KEY, n_in=8, n_hidden=8, n_out=4)
+    del params["hidden"]["w_input"]
+    diags = analysis.check_nodes(nodes, params=params)
+    assert any(d.code == "TB107" and d.site == "hidden.input" for d in diags)
+
+
+def test_tb110_weight_shape_mismatches():
+    nodes = [_lif("h", (Connection("input"),), 8),
+             LayerNode("o", LI(), ff_integrate,
+                       inputs=(Connection("h"),), out_dim=4)]
+    params = {"h": {"w_input": jnp.zeros((16, 8))},
+              "o": {"w_h": jnp.zeros((8, 5))}}       # expected (8, 4)
+    hits = [d for d in analysis.check_nodes(nodes, params=params)
+            if d.code == "TB110"]
+    assert [d.site for d in hits] == ["o.h"]
+    params["o"]["w_h"] = jnp.zeros((8, 4))
+    clean = analysis.check_nodes(nodes, params=params)
+    assert "TB110" not in codes_of(clean)
+
+
+def test_tb111_missing_out_dim():
+    nodes = [LayerNode("z", LIF(), ff_integrate,
+                       inputs=(Connection("input"),))]
+    assert "TB111" in codes_of(analysis.check_nodes(nodes))
+
+
+def test_tb231_tb232_weight_key_hazards():
+    rule = pair_stdp()
+    pre = _lif("pre", (Connection("input"),), 8)
+    h = LayerNode("h", LIF(), ff_integrate,
+                  inputs=(Connection("input", plastic=rule,
+                                     weight="w_shared"),
+                          Connection("pre", plastic=rule,
+                                     weight="w_shared")),
+                  out_dim=8)
+    assert "TB231" in codes_of(analysis.check_nodes([pre, h]))
+    h2 = LayerNode("h", LIF(), ff_integrate,
+                   inputs=(Connection("input", plastic=rule,
+                                      weight="w_shared"),
+                           Connection("pre", weight="w_shared")),
+                   out_dim=8)
+    assert "TB232" in codes_of(analysis.check_nodes([pre, h2]))
+
+
+# ---------------------------------------------------------------------------
+# TB2xx: fusion explainability + VMEM prediction
+# ---------------------------------------------------------------------------
+
+
+def test_tb201_back_reference_is_whole_program_fallback():
+    nodes = [_lif("a", (Connection("input"), Connection("b")), 8),
+             _lif("b", (Connection("input"),), 8)]
+    compiled = analysis.compile_quiet(nodes)
+    seg = compiled.segments[0]
+    assert seg.kind == plan_mod.FALLBACK and seg.codes == ("TB201",)
+    assert len(compiled.segments) == 1 and set(seg.names) == {"a", "b"}
+    assert "TB201" in codes_of(analysis.check_plan(nodes, plan=compiled))
+
+
+def test_tb202_unhoistable_integrate():
+    def opaque(params, feeds):
+        return sum(feeds.values())
+    nodes = [LayerNode("a", LIF(), opaque,
+                       inputs=(Connection("input"),), out_dim=8)]
+    diags = analysis.check_plan(nodes)
+    hits = [d for d in diags if d.code == "TB202"]
+    assert hits and hits[0].site == "a"
+
+
+def test_tb203_delayed_self():
+    nodes = [_lif("a", (Connection("input"),
+                        Connection("self", delay=1)), 8)]
+    assert "TB203" in codes_of(analysis.check_plan(nodes))
+
+
+def test_tb206_unmatched_fire_pattern():
+    nodes = [_lif("a", (Connection("input"),), 8,
+                  neuron=LIF(reset="none"))]
+    hits = [d for d in analysis.check_plan(nodes) if d.code == "TB206"]
+    assert hits and "reset" in hits[0].message
+
+
+def test_tb207_integrate_program_mismatch():
+    nodes = [LayerNode("a", LIF(), branch_integrate,
+                       inputs=(Connection("input"),), out_dim=8)]
+    assert "TB207" in codes_of(analysis.check_plan(nodes))
+
+
+def test_tb205_neuron_without_program():
+    nodes = [LayerNode("a", NeuronSpec(), ff_integrate,
+                       inputs=(Connection("input"),), out_dim=8)]
+    assert "TB205" in codes_of(analysis.check_plan(nodes))
+
+
+def test_tb210_plastic_step_fallback_sites_the_edge():
+    rule = pair_stdp()
+    big = dataclasses.replace(rule, terms=rule.terms + tuple(
+        UpdateTerm(0.001) for _ in range(3)))
+    nodes, _ = make_plastic_ff(KEY, n_in=8, n_hidden=8, rule=big)
+    compiled = analysis.compile_quiet(nodes)
+    assert compiled.plastic[0].code == "TB210"
+    hits = [d for d in analysis.check_plan(nodes, plan=compiled)
+            if d.code == "TB210"]
+    assert hits and hits[0].site == "hidden.input"
+
+
+def test_fallback_segments_all_carry_codes():
+    """ISSUE acceptance: every fallback segment is machine-explained."""
+    def opaque(params, feeds):
+        return sum(feeds.values())
+    nodes = [LayerNode("a", LIF(), opaque,
+                       inputs=(Connection("input"),), out_dim=8),
+             _lif("b", (Connection("a"), Connection("self", delay=2)), 8),
+             _lif("c", (Connection("b"),), 4)]
+    compiled = analysis.compile_quiet(nodes)
+    for seg in compiled.segments:
+        if seg.kind == plan_mod.FALLBACK:
+            assert seg.codes and len(seg.codes) == len(seg.names)
+            assert all(code in analysis.CODES for code in seg.codes)
+            assert all(code in seg.reason for code in seg.codes)
+    desc = compiled.describe()
+    assert "TB202" in desc and "TB203" in desc
+
+
+def test_tb230_predicted_vmem_over_budget(monkeypatch):
+    nodes, params = make_srnn_ecg(KEY)
+    monkeypatch.setenv("REPRO_VMEM_LIMIT_MB", "0.05")
+    diags = analysis.check_plan(nodes, T=256, B=8, params=params)
+    hits = [d for d in diags if d.code == "TB230"]
+    assert hits and "MiB" in hits[0].message
+    monkeypatch.delenv("REPRO_VMEM_LIMIT_MB")
+    assert "TB230" not in codes_of(
+        analysis.check_plan(nodes, T=256, B=8, params=params))
+
+
+# ---------------------------------------------------------------------------
+# the REPRO_CHECK compile hook
+# ---------------------------------------------------------------------------
+
+
+def test_check_mode_rejects_unknown_value(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECK", "bogus")
+    with pytest.raises(ValueError):
+        plan_mod.check_mode()
+
+
+def test_repro_check_warn_records_incident(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECK", "warn")
+    clear_incidents()
+    nodes = [_lif("a", (Connection("input"), Connection("b")), 8),
+             _lif("b", (Connection("a"),), 8)]
+    try:
+        compiled = plan_mod.compile_program(nodes)   # warn: still compiles
+        assert compiled.segments
+        checks = [e for e in incident_log() if e.kind == "check"]
+        assert any(e.stage == "TB103" for e in checks), checks
+    finally:
+        clear_incidents()
+
+
+def test_repro_check_raise_rejects_weight_collision(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECK", "raise")
+    rule = pair_stdp()
+    pre = _lif("pre", (Connection("input"),), 8)
+    h = LayerNode("h", LIF(), ff_integrate,
+                  inputs=(Connection("input", plastic=rule,
+                                     weight="w_shared"),
+                          Connection("pre", plastic=rule,
+                                     weight="w_shared")),
+                  out_dim=8)
+    with pytest.raises(analysis.DiagnosticError) as ei:
+        plan_mod.compile_program([pre, h])
+    assert any(d.code == "TB231" for d in ei.value.diagnostics)
+    monkeypatch.setenv("REPRO_CHECK", "off")
+    assert plan_mod.compile_program([pre, h]).segments  # off: compiles
+
+
+# ---------------------------------------------------------------------------
+# TB3xx: kernel-spec defects via a throwaway registered spec
+# ---------------------------------------------------------------------------
+
+
+def _noop(*args, **kw):
+    return None
+
+
+@contextlib.contextmanager
+def fake_spec(name="_tb_test", preferred=8, align=4, coverage=None,
+              vmem=None, candidates=(), tile_model="default"):
+    if tile_model == "default":
+        tile_model = registry.TileModel(
+            out=(("M", "bm"),),
+            tiles=lambda dims, blocks: {"x": (blocks["bm"],)},
+            coverage=coverage)
+    spec = registry.KernelSpec(
+        name=name, ref=_noop, pallas=_noop, apply=_noop,
+        block_axes=(registry.BlockAxis("bm", "M", preferred, align),),
+        dims_of=lambda: {"M": 32},
+        make_inputs=lambda key: (),
+        candidates=tuple(candidates),
+        vmem_bytes=vmem,
+        tile_model=tile_model)
+    registry.register(spec)
+    try:
+        yield spec
+    finally:
+        registry._REGISTRY.pop(name, None)
+
+
+def test_tb301_coverage_gap():
+    with fake_spec(coverage=lambda dims, blocks: [((0, 16),)]) as spec:
+        hits = [d for d in analysis.check_kernel(spec.name)
+                if d.code == "TB301"]
+    assert hits and "never written" in hits[0].message
+
+
+def test_tb302_coverage_overlap():
+    with fake_spec(coverage=lambda dims, blocks:
+                   [((0, 32),), ((8, 16),)]) as spec:
+        hits = [d for d in analysis.check_kernel(spec.name)
+                if d.code == "TB302"]
+    assert hits and "more than once" in hits[0].message
+
+
+def test_tb303_misaligned_preferred_block():
+    with fake_spec(preferred=6, align=4) as spec:
+        assert "TB303" in codes_of(analysis.check_kernel(spec.name))
+
+
+def test_tb304_vmem_model_underestimates():
+    # declared tile: 8 floats = 32 B; the model claims 8 B
+    with fake_spec(vmem=lambda dims, blocks: 8) as spec:
+        assert "TB304" in codes_of(analysis.check_kernel(spec.name))
+
+
+def test_tb305_tb306_vmem_model_too_loose_and_over_budget():
+    with fake_spec(vmem=lambda dims, blocks: 64 * 2 ** 20) as spec:
+        got = codes_of(analysis.check_kernel(spec.name))
+    assert {"TB305", "TB306"} <= got
+
+
+def test_tb308_candidate_names_unknown_axis():
+    with fake_spec(candidates=({"bogus": 8},)) as spec:
+        hits = [d for d in analysis.check_kernel(spec.name)
+                if d.code == "TB308"]
+    assert hits and "bogus" in hits[0].message
+
+
+def test_tb309_spec_without_tile_model():
+    with fake_spec(tile_model=None) as spec:
+        assert "TB309" in codes_of(analysis.check_kernel(spec.name))
+
+
+def test_honest_fake_spec_checks_clean():
+    with fake_spec(vmem=lambda dims, blocks: 4 * blocks["bm"]) as spec:
+        diags = analysis.check_kernel(spec.name)
+    assert not diags, analysis.render(diags)
+
+
+def test_tb307_block_table_violations():
+    flags = np.array([[1, 1], [1, 0]], np.int32)
+    ok = analysis.check_block_table(
+        flags, ii=[0, 0, 1], kk=[0, 1, 0], active=[1, 1, 1])
+    assert ok == []
+    dup = analysis.check_block_table(
+        flags, ii=[0, 0, 0, 1], kk=[0, 1, 1, 0], active=[1, 1, 1, 1])
+    assert any("twice" in p for p in dup)
+    missed = analysis.check_block_table(
+        flags, ii=[0, 0], kk=[0, 1], active=[1, 1])
+    assert any("never visited" in p for p in missed)
+    assert any("absent" in p for p in missed)        # row 1 unrepresented
+    ghost = analysis.check_block_table(
+        flags, ii=[0, 0, 1, 1], kk=[0, 1, 0, 1], active=[1, 1, 1, 1])
+    assert any("silent block" in p for p in ghost)
+    unsorted_rows = analysis.check_block_table(
+        flags, ii=[1, 0, 0], kk=[0, 0, 1], active=[1, 1, 1])
+    assert any("non-decreasing" in p for p in unsorted_rows)
+
+
+def test_coverage_problems_ragged_tail_is_exact():
+    tm = registry.TileModel(out=(("M", "bm"),),
+                            tiles=lambda dims, blocks: {})
+    assert analysis.coverage_problems(tm, {"M": 10}, {"bm": 4}) == []
+
+
+# ---------------------------------------------------------------------------
+# TB4xx: mapping defects
+# ---------------------------------------------------------------------------
+
+
+def test_tb401_core_over_budget():
+    ops = [mp.Op("a", "fc", n_neurons=40, fan_in=16, inputs=("input",))]
+    cores = [mp.CoreAssignment("a", 0, 40)]
+    diags = analysis.check_cores(cores, ops, core_neurons=32)
+    assert any(d.code == "TB401" for d in diags)
+    assert "TB401" in codes_of(analysis.check_cores(
+        [mp.CoreAssignment("a", 8, 4)], ops, core_neurons=64))
+
+
+def test_tb402_uncovered_op_and_range_hole():
+    ops = [mp.Op("a", "fc", 8, 4, inputs=("input",)),
+           mp.Op("b", "fc", 12, 4, inputs=("a",))]
+    diags = analysis.check_cores([mp.CoreAssignment("a", 0, 8)], ops)
+    assert any(d.code == "TB402" and d.site == "b" for d in diags)
+    holey = [mp.CoreAssignment("a", 0, 8),
+             mp.CoreAssignment("b", 0, 4), mp.CoreAssignment("b", 8, 12)]
+    diags = analysis.check_cores(holey, ops)
+    assert any(d.code == "TB402" and "holes" in d.message for d in diags)
+
+
+def test_tb403_off_grid_placement():
+    ops = [mp.Op("a", "fc", 4, 4, inputs=("input",))]
+    mapping = mp.Mapping(cores=[mp.CoreAssignment("a", 0, 4)],
+                         positions=np.array([[99, 0]]), cost=0.0)
+    diags = analysis.check_mapping(mapping, ops)
+    assert any(d.code == "TB403" for d in diags)
+    short = mp.Mapping(cores=[mp.CoreAssignment("a", 0, 4)],
+                       positions=np.zeros((0, 2), int), cost=0.0)
+    assert "TB403" in codes_of(analysis.check_mapping(short, ops))
+
+
+def test_tb404_fanin_beyond_physical_core():
+    ops = [mp.Op("wide", "fc", 4,
+                 fan_in=mp.CORE_FANIN * (mp.CORE_NEURONS + 1),
+                 inputs=("input",))]
+    diags = analysis.check_cores([mp.CoreAssignment("wide", 0, 4)], ops)
+    assert any(d.code == "TB404" for d in diags)
+
+
+def test_tb405_link_fanout_budget():
+    ops = [mp.Op("s", "fc", 2, 0),
+           mp.Op("c", "fc", 10, 4, inputs=("s",))]
+    mapping = mp.Mapping(cores=[mp.CoreAssignment("s", 0, 2),
+                                mp.CoreAssignment("c", 0, 10)],
+                         positions=np.array([[0, 0], [0, 1]]), cost=0.0)
+    diags = analysis.check_mapping(mapping, ops, link_fanout=10)
+    assert any(d.code == "TB405" and d.site == "s" for d in diags)
+    assert "TB405" not in codes_of(
+        analysis.check_mapping(mapping, ops, link_fanout=100))
+
+
+# ---------------------------------------------------------------------------
+# property tests: mutate valid random artifacts per defect class
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=1, max_value=3),
+       st.sampled_from(["TB102", "TB105", "TB108"]))
+def test_property_injected_program_defects(n, code):
+    base = NeuronProgram(states=(StateVar("v", Decay("const", 0.9)),),
+                         threshold=Threshold())
+    assert analysis.check_program(base) == []
+    if code == "TB102":
+        extra = tuple(StateVar(f"s{i}", Decay("learned", 0.9, param="tau"))
+                      for i in range(n + 1))
+        prog = dataclasses.replace(base, states=base.states + extra)
+    elif code == "TB105":
+        extra = tuple(StateVar(f"s{i}", Decay("const", 0.5))
+                      for i in range(n))
+        prog = dataclasses.replace(base, states=base.states + extra)
+    else:
+        prog = dataclasses.replace(
+            base, states=(StateVar("v", Decay("const", 1.0 + n)),))
+    assert code in codes_of(analysis.check_program(prog))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=2, max_value=5),
+       st.sampled_from(["TB101", "TB103", "TB104", "TB111"]))
+def test_property_injected_graph_defects(depth, code):
+    nodes = _chain(depth)
+    assert not analysis.at_least(analysis.check_nodes(nodes), "warning")
+    last = f"n{depth - 1}"
+    if code == "TB101":
+        bad = nodes[:-1] + [_lif(last, (Connection("nope"),), 8)]
+    elif code == "TB103":
+        bad = [_lif("n0", (Connection("input"), Connection(last)), 8)]
+        bad += nodes[1:]
+    elif code == "TB104":
+        bad = nodes + [_lif("orphan", (Connection("self"),), 8)]
+    else:
+        bad = nodes[:-1] + [LayerNode(last, LIF(), ff_integrate,
+                                      inputs=(Connection(f"n{depth - 2}"),))]
+    assert code in codes_of(analysis.check_nodes(bad))

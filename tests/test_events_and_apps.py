@@ -3,10 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import events
-from repro.core.neuron import LI, LIF
+from repro.core.neuron import LIF
 from repro.core.snn_layers import (BCIConfig, bci_finetune_fc, bci_forward,
                                    bci_init, ff_integrate, make_dhsnn_shd,
                                    make_srnn_ecg)
@@ -76,14 +75,14 @@ def _train_a_bit(loss_fn, params, steps=30, lr=0.5):
     losses = []
     grad_fn = jax.jit(jax.value_and_grad(loss_fn))
     for i in range(steps):
-        l, g = grad_fn(params)
+        loss, g = grad_fn(params)
         gn = jnp.sqrt(sum(jnp.sum(jnp.square(gg))
                           for gg in jax.tree.leaves(g)))
         sc = jnp.minimum(1.0, 1.0 / (gn + 1e-9))      # clipped SGD
         params = jax.tree.map(
             lambda p, gg: p - lr * sc * gg if gg is not None else p,
             params, g)
-        losses.append(float(l))
+        losses.append(float(loss))
     return params, losses
 
 

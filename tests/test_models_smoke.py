@@ -46,7 +46,7 @@ def test_train_step_no_nans(arch):
     assert np.isfinite(float(m["loss"]))
     assert np.isfinite(float(m["grad_norm"]))
     leaves = jax.tree.leaves(state["params"])
-    assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves)
+    assert all(bool(jnp.all(jnp.isfinite(leaf))) for leaf in leaves)
 
 
 @pytest.mark.slow

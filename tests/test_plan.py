@@ -472,7 +472,8 @@ def test_integer_spike_input_keeps_float_state():
     for run_fn in (events.run, plan.run):
         _, o_int, _ = run_fn(nodes, params, x_int)
         assert jnp.issubdtype(o_int.dtype, jnp.floating)
-        np.testing.assert_allclose(o_int, o_float, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(o_int, o_float,
+                                   atol=plan.CROSS_ENGINE_ATOL, rtol=1e-5)
 
 
 def test_plan_runs_under_jit():
@@ -486,7 +487,8 @@ def test_plan_runs_under_jit():
         return o
 
     _, o_ref, _ = events.run(nodes, params, x)
-    np.testing.assert_allclose(f(params, x), o_ref, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(f(params, x), o_ref,
+                               atol=plan.CROSS_ENGINE_ATOL, rtol=1e-5)
 
 
 @settings(max_examples=10, deadline=None)

@@ -432,8 +432,9 @@ def test_oversized_program_refused_by_matcher():
     rule = _random_rule(4, 4, 0.9, 0.8, 0.01, 0)
     big = dataclasses.replace(rule, terms=rule.terms + (
         UpdateTerm(0.001, pre=("spikes",), post=("spikes",)),))
-    lower, why = plan._match_synapse_pattern(big)
+    lower, code, why = plan._match_synapse_pattern(big)
     assert lower == plan.SYN_STEP and "update terms" in why
+    assert code == "TB210"
 
 
 def test_describe_names_plastic_lowerings():

@@ -3,7 +3,6 @@ the dense linear map it encodes, and the storage accounting must show the
 paper's compression ordering (Fig. 14)."""
 
 import numpy as np
-import pytest
 
 from repro.core import topology as topo
 
