@@ -8,6 +8,7 @@ proves properties of what will execute before anything is traced:
   check_plan(nodes, plan=, T=, B=)      fusion explainability + VMEM
   check_kernel(name) / check_kernels()  TB3xx over the registry
   check_cores(cores, ops) / check_mapping(mapping, ops)   TB4xx
+  check_serve(nodes, params, cfg)       TB5xx over a serve deployment
   check(target, **kw)                   polymorphic dispatch over the above
 
 All of them return `List[Diagnostic]` (stable code, severity, site,
@@ -31,6 +32,7 @@ from repro.analysis.mapping import check_cores, check_mapping
 from repro.analysis.plans import check_plan, compile_quiet
 from repro.analysis.program import (DEFAULT_EXTERNAL, check_nodes_graph,
                                     check_program, check_synapse)
+from repro.analysis.serve import check_serve, session_footprint
 
 
 def check_nodes(nodes: Any, params: Any = None, T: Any = None, B: Any = None,
@@ -80,6 +82,7 @@ __all__ = [
     "at_least", "make", "raise_if", "render", "severity_rank", "worst",
     "check", "check_block_table", "check_cores", "check_kernel",
     "check_kernels", "check_mapping", "check_nodes", "check_nodes_graph",
-    "check_plan", "check_program", "check_synapse", "compile_quiet",
-    "coverage_problems", "DEFAULT_EXTERNAL",
+    "check_plan", "check_program", "check_serve", "check_synapse",
+    "compile_quiet", "coverage_problems", "session_footprint",
+    "DEFAULT_EXTERNAL",
 ]

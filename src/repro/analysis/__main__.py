@@ -5,6 +5,7 @@ Usage:
   python -m repro.analysis --kernels
   python -m repro.analysis --models [-T 128] [-B 8]
   python -m repro.analysis --mapping
+  python -m repro.analysis --serve
 
 Exit status 1 when findings at/above --fail-on exist (default: error;
 "never" always exits 0). CI runs `--all --fail-on warning` as a fast-tier
@@ -46,6 +47,28 @@ def _check_models(T: int, B: int) -> List[Diagnostic]:
     return out
 
 
+def _check_serving() -> List[Diagnostic]:
+    """TB5xx over the shipped models under a representative deployment:
+    an 8-slot cohort with a cache budget sized for the full cohort (the
+    configuration the README quickstart ships), so the gate proves the
+    defaults do not thrash."""
+    import jax
+
+    from repro import analysis
+    from repro.serve import EngineConfig
+
+    out: List[Diagnostic] = []
+    for name, factory in _model_factories().items():
+        nodes, params = factory(jax.random.PRNGKey(0))
+        fp = analysis.session_footprint(nodes, params)
+        cfg = EngineConfig(window=32, capacity=8, queue_limit=64,
+                           cache_bytes=8 * fp)
+        for d in analysis.check_serve(nodes, params, cfg):
+            out.append(Diagnostic(d.code, d.severity, f"{name}:{d.site}",
+                                  d.message, d.hint))
+    return out
+
+
 def _check_mappings() -> List[Diagnostic]:
     from repro import analysis
     from repro.configs import snn_models
@@ -78,15 +101,19 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="Static checks over programs, plans, kernel specs, "
-                    "and mappings (TB1xx-TB4xx).")
+                    "mappings, and serve deployments (TB1xx-TB5xx).")
     ap.add_argument("--all", action="store_true",
-                    help="kernels + models + mappings (the CI gate)")
+                    help="kernels + models + mappings + serve "
+                         "(the CI gate)")
     ap.add_argument("--kernels", action="store_true",
                     help="TB3xx over every registered kernel family")
     ap.add_argument("--models", action="store_true",
                     help="TB1xx/TB2xx over the shipped application models")
     ap.add_argument("--mapping", action="store_true",
                     help="TB4xx over configs/snn_models.py mappings")
+    ap.add_argument("--serve", action="store_true",
+                    help="TB5xx over the shipped models under the "
+                         "default serve deployment")
     ap.add_argument("--fail-on", choices=["error", "warning", "never"],
                     default="error",
                     help="exit 1 when findings at/above this severity "
@@ -99,7 +126,8 @@ def main(argv=None) -> int:
                     help="batch assumed for VMEM prediction (TB230)")
     args = ap.parse_args(argv)
 
-    if not (args.all or args.kernels or args.models or args.mapping):
+    if not (args.all or args.kernels or args.models or args.mapping
+            or args.serve):
         args.all = True
 
     from repro import analysis
@@ -111,6 +139,8 @@ def main(argv=None) -> int:
         diags.extend(_check_models(args.T, args.B))
     if args.all or args.mapping:
         diags.extend(_check_mappings())
+    if args.all or args.serve:
+        diags.extend(_check_serving())
 
     if args.json:
         print(json.dumps([d.__dict__ for d in at_least(diags, "info")],

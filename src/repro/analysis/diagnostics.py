@@ -11,6 +11,8 @@ the same layering the compiler stack has:
   TB3xx  kernel-spec checks (grid coverage, block contracts, VMEM model
                            sanity, sparse-channel block tables)
   TB4xx  mapping checks   (core capacity, unmapped ops, placement, links)
+  TB5xx  serve checks     (state-cache budget vs session footprint,
+                           cohort shape vs plan, admission bounds)
 
 The default severity of each code lives in `CODES`; `make()` applies it
 so checkers and tests agree on one source of truth. `raise_if` turns a
@@ -69,6 +71,12 @@ CODES: Dict[str, Tuple[str, str]] = {
     "TB403": ("error", "core placed off-grid"),
     "TB404": ("error", "fan-in unsatisfiable"),
     "TB405": ("warning", "fanout exceeds link budget"),
+    # -- TB5xx: serve checks ----------------------------------------------------
+    "TB501": ("error", "state-cache budget below one session footprint"),
+    "TB502": ("warning", "state-cache budget thrashes at capacity"),
+    "TB503": ("warning", "serving a plan with fallback segments"),
+    "TB504": ("warning", "admission queue smaller than cohort capacity"),
+    "TB505": ("error", "window/capacity configuration invalid"),
 }
 
 

@@ -54,6 +54,13 @@ class ServeConfig:
     max_seq: int = 512
     eos_id: int = -1                   # -1: never stops early
     greedy: bool = True
+    # admission policy for prompts that cannot fit the KV cache alongside
+    # their requested generation budget (len(prompt) > max_seq - max_new):
+    # "truncate" keeps the most recent tokens (recency matters for LM
+    # state), "reject" refuses the request. Either way the outcome is
+    # explicit — recorded on the incident log, and flagged degraded by
+    # `generate_resilient` — never a silent wrong-length serve.
+    long_prompt: str = "truncate"      # "truncate" | "reject"
     # resilient-path knobs (generate_resilient only)
     deadline_s: Optional[float] = None  # per-request wall-clock budget
     max_retries: int = 2                # extra attempts per failing cohort
@@ -79,6 +86,47 @@ class ServeResult:
     error: Optional[str] = None
 
 
+def _admit(reqs: List[Request], serve_cfg: ServeConfig
+           ) -> Tuple[List[Optional[Request]], List[Optional[str]]]:
+    """Apply the long-prompt admission policy to every request.
+
+    Returns (admitted, notes) aligned with `reqs`: an in-budget request
+    passes through with note None; an over-budget one is either replaced
+    by a truncated copy (policy "truncate", note describes the cut) or
+    mapped to None (policy "reject", note holds the refusal). Every
+    non-None note is also recorded on the incident log
+    (kind="serve", stage="admission").
+    """
+    admitted: List[Optional[Request]] = []
+    notes: List[Optional[str]] = []
+    for r in reqs:
+        budget = max(1, serve_cfg.max_seq - r.max_new)
+        if len(r.prompt) <= budget:
+            admitted.append(r)
+            notes.append(None)
+            continue
+        if serve_cfg.long_prompt == "reject":
+            msg = (f"rejected: prompt length {len(r.prompt)} exceeds "
+                   f"admission budget {budget} (max_seq="
+                   f"{serve_cfg.max_seq}, max_new={r.max_new})")
+            admitted.append(None)
+        elif serve_cfg.long_prompt == "truncate":
+            msg = (f"truncated: prompt {len(r.prompt)} -> last {budget} "
+                   f"tokens (max_seq={serve_cfg.max_seq}, "
+                   f"max_new={r.max_new})")
+            admitted.append(Request(prompt=np.asarray(r.prompt)[-budget:],
+                                    max_new=r.max_new))
+        else:
+            raise ValueError(
+                f"unknown long_prompt policy {serve_cfg.long_prompt!r}; "
+                "expected 'truncate' or 'reject'")
+        notes.append(msg)
+        record(FallbackEvent(
+            kind="serve", family="generate", stage="admission", error=msg,
+            dims={"prompt_len": int(len(r.prompt)), "budget": int(budget)}))
+    return admitted, notes
+
+
 def _pad_prompts(reqs: List[Request], max_seq: int) -> Tuple[np.ndarray, np.ndarray]:
     lens = np.array([len(r.prompt) for r in reqs])
     L = int(lens.max())
@@ -90,11 +138,23 @@ def _pad_prompts(reqs: List[Request], max_seq: int) -> Tuple[np.ndarray, np.ndar
 
 def generate(params: Any, cfg: ModelConfig, reqs: List[Request],
              serve_cfg: ServeConfig) -> List[np.ndarray]:
-    """Serve a cohort of requests; returns generated token arrays."""
+    """Serve a cohort of requests; returns generated token arrays.
+
+    Prompts over the admission budget (max_seq - max_new) follow
+    `serve_cfg.long_prompt`: truncated to the most recent tokens
+    (default) or, under "reject", raise ValueError — use
+    `generate_resilient` to get per-request degraded results instead.
+    """
     assert cfg.family not in ("encdec",), "use serve.whisper for enc-dec"
+    admitted, notes = _admit(reqs, serve_cfg)
+    rejected = [n for a, n in zip(admitted, notes) if a is None]
+    if rejected:
+        raise ValueError(
+            f"{len(rejected)} request(s) refused at admission "
+            f"(long_prompt='reject'): {rejected[0]}")
     out: List[np.ndarray] = []
-    for lo in range(0, len(reqs), serve_cfg.batch):
-        cohort = reqs[lo:lo + serve_cfg.batch]
+    for lo in range(0, len(admitted), serve_cfg.batch):
+        cohort = admitted[lo:lo + serve_cfg.batch]
         out.extend(_generate_cohort(params, cfg, cohort, serve_cfg))
     return out
 
@@ -112,9 +172,18 @@ def generate_resilient(params: Any, cfg: ModelConfig, reqs: List[Request],
     keeps its tokens. Under REPRO_STRICT=1 the first failure propagates.
     """
     assert cfg.family not in ("encdec",), "use serve.whisper for enc-dec"
-    out: List[ServeResult] = []
-    for ci, lo in enumerate(range(0, len(reqs), serve_cfg.batch)):
-        cohort = reqs[lo:lo + serve_cfg.batch]
+    admitted, notes = _admit(reqs, serve_cfg)
+    results: List[Optional[ServeResult]] = [None] * len(reqs)
+    live: List[Tuple[int, Request]] = []
+    for i, (a, note) in enumerate(zip(admitted, notes)):
+        if a is None:       # refused at admission: degraded, no tokens
+            results[i] = ServeResult(np.zeros((0,), np.int32),
+                                     degraded=True, error=note)
+        else:
+            live.append((i, a))
+    for ci, lo in enumerate(range(0, len(live), serve_cfg.batch)):
+        pairs = live[lo:lo + serve_cfg.batch]
+        cohort = [r for _, r in pairs]
         rng = random.Random(serve_cfg.retry_seed * 1000003 + ci)
         t0 = time.monotonic()
         tokens: Optional[List[np.ndarray]] = None
@@ -144,15 +213,19 @@ def generate_resilient(params: Any, cfg: ModelConfig, reqs: List[Request],
                 error=f"cohort finished in {latency:.3f}s "
                       f"(deadline {serve_cfg.deadline_s}s)",
                 dims={"cohort": ci, "n": len(cohort)}))
-        for i in range(len(cohort)):
+        for slot, (orig_i, _) in enumerate(pairs):
+            note = notes[orig_i]
             if tokens is None:
-                out.append(ServeResult(np.zeros((0,), np.int32),
-                                       degraded=True, retries=attempt,
-                                       latency_s=latency, error=repr(err)))
+                results[orig_i] = ServeResult(
+                    np.zeros((0,), np.int32), degraded=True,
+                    retries=attempt, latency_s=latency, error=repr(err))
             else:
-                out.append(ServeResult(tokens[i], degraded=late,
-                                       retries=attempt, latency_s=latency))
-    return out
+                # a truncated prompt still serves, but the response is not
+                # what the full prompt would have produced: flag it
+                results[orig_i] = ServeResult(
+                    tokens[slot], degraded=late or note is not None,
+                    retries=attempt, latency_s=latency, error=note)
+    return results
 
 
 def _generate_cohort(params, cfg, cohort: List[Request],
