@@ -30,10 +30,11 @@ from benchmarks import (bench_applications, bench_energy, bench_kernels,
                         bench_mapping_tradeoff, bench_plasticity,
                         bench_roofline, bench_serving, bench_snn_engine,
                         bench_snn_models, bench_spiking_lm,
-                        bench_topology_storage)
+                        bench_topology_exec, bench_topology_storage)
 
 SUITES = [
     ("topology_storage", bench_topology_storage),
+    ("topology_exec", bench_topology_exec),
     ("snn_models", bench_snn_models),
     ("snn_engine", bench_snn_engine),
     ("serving", bench_serving),

@@ -9,6 +9,7 @@ proves properties of what will execute before anything is traced:
   check_kernel(name) / check_kernels()  TB3xx over the registry
   check_cores(cores, ops) / check_mapping(mapping, ops)   TB4xx
   check_serve(nodes, params, cfg)       TB5xx over a serve deployment
+  check_topology(topo)                  TB6xx over a compressed encoding
   check(target, **kw)                   polymorphic dispatch over the above
 
 All of them return `List[Diagnostic]` (stable code, severity, site,
@@ -33,6 +34,7 @@ from repro.analysis.plans import check_plan, compile_quiet
 from repro.analysis.program import (DEFAULT_EXTERNAL, check_nodes_graph,
                                     check_program, check_synapse)
 from repro.analysis.serve import check_serve, session_footprint
+from repro.analysis.topology import check_topology
 
 
 def check_nodes(nodes: Any, params: Any = None, T: Any = None, B: Any = None,
@@ -58,14 +60,18 @@ def check(target: Any, **kw: Any) -> List[Diagnostic]:
 
     list/tuple of LayerNode -> check_nodes; NeuronProgram ->
     check_program; SynapseProgram -> check_synapse; kernel name (str) ->
-    check_kernel; mapping.Mapping -> check_mapping(target, ops=...).
+    check_kernel; mapping.Mapping -> check_mapping(target, ops=...);
+    EncodedTopology -> check_topology.
     """
     from repro.core import mapping as mp
     from repro.core.neuron import NeuronProgram
     from repro.core.plasticity import SynapseProgram
+    from repro.core.topology import EncodedTopology
 
     if isinstance(target, str):
         return check_kernel(target, **kw)
+    if isinstance(target, EncodedTopology):
+        return check_topology(target, **kw)
     if isinstance(target, NeuronProgram):
         return check_program(target, **kw)
     if isinstance(target, SynapseProgram):
@@ -83,6 +89,7 @@ __all__ = [
     "check", "check_block_table", "check_cores", "check_kernel",
     "check_kernels", "check_mapping", "check_nodes", "check_nodes_graph",
     "check_plan", "check_program", "check_serve", "check_synapse",
+    "check_topology",
     "compile_quiet", "coverage_problems", "session_footprint",
     "DEFAULT_EXTERNAL",
 ]

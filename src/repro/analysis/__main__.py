@@ -6,6 +6,7 @@ Usage:
   python -m repro.analysis --models [-T 128] [-B 8]
   python -m repro.analysis --mapping
   python -m repro.analysis --serve
+  python -m repro.analysis --topologies
 
 Exit status 1 when findings at/above --fail-on exist (default: error;
 "never" always exits 0). CI runs `--all --fail-on warning` as a fast-tier
@@ -97,14 +98,45 @@ def _check_mappings() -> List[Diagnostic]:
     return out
 
 
+def _check_topologies() -> List[Diagnostic]:
+    """TB6xx over a representative set of shipped encodings: every IE type
+    (0/1/2/3), pooling, and a delayed skip — the same shapes the compressed
+    execution path runs through the gather channel."""
+    import numpy as np
+
+    from repro import analysis
+    from repro.core import topology as tp
+
+    rng = np.random.default_rng(0)
+    dense = rng.normal(size=(40, 30)).astype(np.float32)
+    sparse = dense * (rng.random((40, 30)) < 0.1)
+    filt = rng.normal(size=(4, 3, 3, 3)).astype(np.float32)
+    cases = {
+        "fc": tp.encode(dense, kind="fc", n_cores=4),
+        "sparse_t0": tp.encode(sparse, kind="sparse", ie_type=0),
+        "sparse_t1": tp.encode(sparse, kind="sparse", ie_type=1),
+        "conv": tp.encode(filt, kind="conv", h=8, w=8),
+        "pool": tp.encode(None, kind="pool", h=8, w=8, c=3, k=2),
+        "skip": tp.encode(tp.encode(sparse, kind="sparse"), kind="skip",
+                          delay=3),
+    }
+    out: List[Diagnostic] = []
+    for name, enc in cases.items():
+        for d in analysis.check_topology(enc):
+            out.append(Diagnostic(d.code, d.severity, f"{name}:{d.site}",
+                                  d.message, d.hint))
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="Static checks over programs, plans, kernel specs, "
-                    "mappings, and serve deployments (TB1xx-TB5xx).")
+                    "mappings, serve deployments, and compressed "
+                    "topologies (TB1xx-TB6xx).")
     ap.add_argument("--all", action="store_true",
-                    help="kernels + models + mappings + serve "
-                         "(the CI gate)")
+                    help="kernels + models + mappings + serve + "
+                         "topologies (the CI gate)")
     ap.add_argument("--kernels", action="store_true",
                     help="TB3xx over every registered kernel family")
     ap.add_argument("--models", action="store_true",
@@ -114,6 +146,9 @@ def main(argv=None) -> int:
     ap.add_argument("--serve", action="store_true",
                     help="TB5xx over the shipped models under the "
                          "default serve deployment")
+    ap.add_argument("--topologies", action="store_true",
+                    help="TB6xx over representative compressed "
+                         "encodings (all four IE types + pool + skip)")
     ap.add_argument("--fail-on", choices=["error", "warning", "never"],
                     default="error",
                     help="exit 1 when findings at/above this severity "
@@ -127,7 +162,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if not (args.all or args.kernels or args.models or args.mapping
-            or args.serve):
+            or args.serve or args.topologies):
         args.all = True
 
     from repro import analysis
@@ -141,6 +176,8 @@ def main(argv=None) -> int:
         diags.extend(_check_mappings())
     if args.all or args.serve:
         diags.extend(_check_serving())
+    if args.all or args.topologies:
+        diags.extend(_check_topologies())
 
     if args.json:
         print(json.dumps([d.__dict__ for d in at_least(diags, "info")],

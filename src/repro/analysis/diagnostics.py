@@ -77,6 +77,12 @@ CODES: Dict[str, Tuple[str, str]] = {
     "TB503": ("warning", "serving a plan with fallback segments"),
     "TB504": ("warning", "admission queue smaller than cohort capacity"),
     "TB505": ("error", "window/capacity configuration invalid"),
+    # -- TB6xx: topology checks -------------------------------------------------
+    "TB601": ("error", "IE entry targets a neuron outside out_dim"),
+    "TB602": ("warning", "duplicate (pre, post) IE entries accumulate"),
+    "TB603": ("warning", "IE coverage misses output neurons"),
+    "TB604": ("error", "storage-bits accounting disagrees with tables"),
+    "TB605": ("error", "delay exceeds the delay-field capacity"),
 }
 
 

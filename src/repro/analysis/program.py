@@ -175,6 +175,24 @@ def _check_weight_shapes(n: LayerNode, prog: Optional[NeuronProgram],
         return out  # custom integrate: weight layout is its own contract
     for c in n.connections:
         site = f"{n.name}.{c.key}"
+        if getattr(c, "topology", None) is not None:
+            # topology-backed edge: shape lives on the encoding, not a
+            # dense weight tensor — check (n_pre, n_post) instead
+            topo = c.topology
+            if isinstance(topo, str):
+                topo = node_params.get(topo)
+            shape = _shape_of(topo)
+            src_dim = (widths.get(n.name) if c.src == "self"
+                       else widths.get(c.src))
+            if shape is not None and (
+                    shape[1] != n.out_dim
+                    or (src_dim is not None and shape[0] != src_dim)):
+                out.append(make(
+                    "TB110", site,
+                    f"topology has shape {shape}, expected "
+                    f"({src_dim if src_dim is not None else '?'}, "
+                    f"{n.out_dim})"))
+            continue
         w = node_params.get(c.weight_key)
         if w is None:
             out.append(make(

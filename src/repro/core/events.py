@@ -62,12 +62,21 @@ class Connection:
     plastic: optional `SynapseProgram` (core/plasticity.py); the edge's
              weight then learns on-chip under `plan.run` and the updated
              tensor is published in `state[node]["syn:<key>"]["w"]`.
+    topology: optional compressed connectivity for this edge — an
+             `EncodedTopology` instance, or a string naming one inside
+             `params[node]`. The edge then executes straight from the IE
+             tables (type-2 FC through the dense/sparse spikemm channels,
+             sparse/conv/pool through the `spikemm_gather` channel) and no
+             dense weight tensor is read. Mutually exclusive with both
+             `plastic` (tables are not learnable) and a `weight` override
+             (there is no dense tensor to alias).
     """
 
     src: str
     delay: int = 0
     weight: str = ""
     plastic: Optional["SynapseProgram"] = None  # noqa: F821
+    topology: Optional[Any] = None              # EncodedTopology | params key
 
     def __post_init__(self):
         if not self.src:
@@ -75,6 +84,20 @@ class Connection:
         if self.delay < 0:
             raise ValueError(f"negative delay {self.delay} on connection "
                              f"from {self.src!r}")
+        if self.topology is not None:
+            from repro.core.topology import EncodedTopology
+            if not isinstance(self.topology, (str, EncodedTopology)):
+                raise TypeError(
+                    f"Connection.topology must be an EncodedTopology or a "
+                    f"params key, got {type(self.topology).__name__}")
+            if self.plastic is not None:
+                raise ValueError(
+                    f"connection from {self.src!r}: topology-backed edges "
+                    "cannot be plastic (IE tables are static configuration)")
+            if self.weight:
+                raise ValueError(
+                    f"connection from {self.src!r}: topology and a weight "
+                    "override are mutually exclusive")
         if self.plastic is not None:
             from repro.core.plasticity import validate_synapse_program
             validate_synapse_program(self.plastic)
@@ -98,6 +121,43 @@ class Connection:
             return spec
         name, d = _parse_src(spec)
         return cls(src=name, delay=d)
+
+    @classmethod
+    def from_topology(cls, src: str, topology: Any,
+                      delay: Optional[int] = None) -> "Connection":
+        """Edge backed by compressed connectivity. `delay` defaults to the
+        topology's own skip delay (Fig. 8c delayed-fire) when it carries
+        one, else 0."""
+        if delay is None:
+            meta = getattr(topology, "meta", None) or {}
+            delay = int(meta.get("delay", 0)) \
+                if getattr(topology, "kind", "") == "skip" else 0
+        return cls(src=src, delay=delay, topology=topology)
+
+
+def resolve_topology(conn: Connection, node_name: str,
+                     params: Dict[str, Any]):
+    """The EncodedTopology a connection executes through, or None.
+
+    A string rides as a key into `params[node]` — the topology then lives
+    with the rest of the node's parameters (it is a registered pytree leaf
+    with no traced children, so jit treats it as static configuration)."""
+    t = conn.topology
+    if t is None:
+        return None
+    if isinstance(t, str):
+        t = params.get(node_name, {}).get(t)
+        if t is None:
+            raise KeyError(
+                f"node {node_name!r}: connection {conn.key!r} names topology "
+                f"{conn.topology!r} but params[{node_name!r}] has no such "
+                "entry")
+    from repro.core.topology import EncodedTopology
+    if not isinstance(t, EncodedTopology):
+        raise TypeError(
+            f"node {node_name!r}: params[{conn.topology!r}] is "
+            f"{type(t).__name__}, expected EncodedTopology")
+    return t
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,14 +242,20 @@ def init_state(nodes: List[LayerNode], batch: int, dtype=jnp.float32,
 def _node_params(n: LayerNode, params: Dict[str, Any]) -> Dict[str, Any]:
     """Node params with custom `Connection.weight` keys aliased onto the
     canonical names, so the built-in integrate conventions (`w_<src>`,
-    `w_self`) transparently pick up overridden/shared weight tensors."""
+    `w_self`) transparently pick up overridden/shared weight tensors.
+    Topology-backed edges alias the canonical name to the EncodedTopology
+    itself — `neuron.locacc` routes it through the compressed channels."""
     p = params.get(n.name, {})
     remap = {("w_self" if c.src == "self" else f"w_{c.src}"): c.weight
              for c in n.connections if c.weight}
-    if remap:
+    topos = {("w_self" if c.src == "self" else f"w_{c.src}"):
+             resolve_topology(c, n.name, params)
+             for c in n.connections if c.topology is not None}
+    if remap or topos:
         p = dict(p)
         for canon, key in remap.items():
             p[canon] = p[key]
+        p.update(topos)
     return p
 
 

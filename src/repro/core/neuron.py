@@ -62,8 +62,14 @@ def locacc(spikes: Array, weights: Array) -> Array:
     """The LOCACC instruction: accumulate presynaptic events into currents.
 
     Dense reference form. The event-gated Pallas kernel (`kernels/spikemm`)
-    is the TPU analogue exploiting spatio-temporal spike sparsity.
+    is the TPU analogue exploiting spatio-temporal spike sparsity. An
+    `EncodedTopology` in weight position executes through its compressed IE
+    tables (`apply_spikes`) — same currents, no dense matrix.
     """
+    if hasattr(weights, "apply_spikes"):
+        lead = spikes.shape[:-1]
+        flat = spikes.reshape((-1, spikes.shape[-1]))
+        return weights.apply_spikes(flat).reshape(lead + (weights.shape[1],))
     return spikes @ weights
 
 

@@ -86,13 +86,14 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import (Any, Dict, Iterable, Iterator, List, Optional, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import events, faults, guards, plasticity
-from repro.core.neuron import Decay, NeuronProgram
+from repro.core.neuron import Decay, NeuronProgram, decay_array
 # note: `repro.kernels` re-exports an `incidents()` *function*, which
 # shadows the submodule on the package namespace — import names directly
 from repro.kernels.incidents import FallbackEvent, record as _record_incident
@@ -266,15 +267,12 @@ def _match_synapse_pattern(prog: "plasticity.SynapseProgram"
                            ) -> Tuple[str, str, str]:
     """Structurally match a SynapseProgram against the `stdp_seq` family.
 
-    -> (SYN_SEQ, "", "") when every trace decay is a constant (the trace
-    DIFFs then hoist through `linrec` and the update terms run in one
-    VMEM-resident window over the weight tile) and the program is small
-    enough for the fused plane stack; else (SYN_STEP, TB-code, reason) —
-    the per-step interpreter over the realized spike trains, always
-    correct.
+    -> (SYN_SEQ, "", "") when the program is small enough for the fused
+    plane stack; else (SYN_STEP, TB-code, reason) — the per-step
+    interpreter over the realized spike trains, always correct. Learned
+    per-synapse trace decays are fine: `linrec` takes a full decay plane,
+    so a sigmoid-resolved learned decay hoists exactly like a constant.
     """
-    if any(t.decay.kind != "const" for t in prog.traces):
-        return SYN_STEP, "TB210", "learned trace decay"
     if len(prog.traces) > 4:
         return SYN_STEP, "TB210", f"{len(prog.traces)} traces"
     if len(prog.terms) > 4:
@@ -475,10 +473,19 @@ def _hoisted_current(node: events.LayerNode, params: Dict[str, Any],
         if conn.src == "self":
             continue
         s = _feed_full(outs, state, conn.src, conn.delay, T)
-        w = params[node.name][conn.weight_key]
-        if not jnp.issubdtype(s.dtype, jnp.floating):
-            s = s.astype(w.dtype)                    # int spikes: match locacc
-        c = spikemm(s.reshape(T * B, -1), w).reshape(T, B, -1)
+        topo = events.resolve_topology(conn, node.name, params)
+        if topo is not None:
+            # compressed connectivity: hoist straight through the topology's
+            # execution channel (spikemm for type-2 FC, spikemm_gather for
+            # sparse/conv/pool IE tables) — dense_equivalent() never runs
+            if not jnp.issubdtype(s.dtype, jnp.floating):
+                s = s.astype(events.state_dtype(s.dtype))
+            c = topo.apply_spikes(s.reshape(T * B, -1)).reshape(T, B, -1)
+        else:
+            w = params[node.name][conn.weight_key]
+            if not jnp.issubdtype(s.dtype, jnp.floating):
+                s = s.astype(w.dtype)                # int spikes: match locacc
+            c = spikemm(s.reshape(T * B, -1), w).reshape(T, B, -1)
         cur = c if cur is None else cur + c
     if cur is None:
         cur = jnp.zeros((T, B, node.out_dim),
@@ -738,14 +745,19 @@ def _mod_full(mod: Optional[Array], T: int, B: int, N: int, dtype) -> Array:
 
 def _learn_fused(prog: "plasticity.SynapseProgram", syn0: Dict[str, Array],
                  pre_full: Array, post_full: Array,
-                 mod_full: Optional[Array]) -> Dict[str, Array]:
+                 mod_full: Optional[Array],
+                 sparams: Optional[Dict[str, Array]] = None
+                 ) -> Dict[str, Array]:
     """Fused `stdp_seq` lowering of one SynapseProgram window.
 
     Trace DIFFs are pure linear recurrences -> hoisted through all-T
     `linrec`; each term's pre/post factor products become (T*B, n) planes
     ("after" traces read the one-step-shifted trajectory); the stacked
     planes drive the serial-in-time `stdp_seq` kernel with the weight tile
-    VMEM-resident across the whole window.
+    VMEM-resident across the whole window. Learned per-synapse decays
+    (`sparams`, the `params[node]["syn:<conn>"]` dict) resolve through
+    `decay_array` exactly like the per-step interpreter and broadcast into
+    the decay plane.
     """
     T, B = pre_full.shape[:2]
     by_name = {t.name: t for t in prog.traces}
@@ -755,7 +767,7 @@ def _learn_fused(prog: "plasticity.SynapseProgram", syn0: Dict[str, Array],
     for tr in prog.traces:
         s = pre_full if tr.source == "pre" else post_full
         h0 = syn0[tr.name].astype(s.dtype)
-        a = jnp.full(s.shape, tr.decay.value, s.dtype)
+        a = jnp.broadcast_to(decay_array(tr.decay, sparams, s.dtype), s.shape)
         y, hT = linrec(a, tr.scale * s, h0)
         traj[tr.name] = y
         finals[tr.name] = hT.astype(syn0[tr.name].dtype)
@@ -818,10 +830,10 @@ def _learn_conn(node: events.LayerNode, conn: events.Connection, lower: str,
     uses_mod = any("mod" in t.post for t in prog.terms)
     mod_f = _mod_full(mod, T, B, post.shape[-1], fdt) if uses_mod else None
     pre, post, syn0, mod_f = jax.lax.stop_gradient((pre, post, syn0, mod_f))
+    sparams = params.get(node.name, {}).get(key)
     if lower == SYN_SEQ:
-        syn1 = _learn_fused(prog, syn0, pre, post, mod_f)
+        syn1 = _learn_fused(prog, syn0, pre, post, mod_f, sparams)
     else:
-        sparams = params.get(node.name, {}).get(key)
         syn1 = plasticity.synapse_run(prog, syn0["w"], pre, post, mod_f,
                                       sparams, syn=syn0)
     if gcfg.active:
@@ -933,8 +945,41 @@ def run(nodes: List[events.LayerNode], params: Dict[str, Any], x: Array,
     return new_state, outs[nodes[-1].name], recs
 
 
+def run_stream(nodes: List[events.LayerNode], params: Dict[str, Any],
+               chunks: Iterable[Array],
+               state: Optional[Dict[str, Any]] = None,
+               plan: Optional[Plan] = None, mod: Optional[Array] = None,
+               learn: bool = True,
+               guard: Union[None, str, guards.GuardConfig] = None
+               ) -> Iterator[Tuple[Dict[str, Any], Array]]:
+    """Chunked/streaming execution: constant peak memory in stream length.
+
+    Consumes an iterable of (T_chunk, batch, n_in) spike chunks and yields
+    `(state, outputs)` after each one, carrying neuron state, skip-delay
+    ring buffers, and synapse state across chunk boundaries. Ring-buffered
+    delay lines make this exact: a delayed edge reads its prefix from the
+    carried ring (`_feed_full`), never from a delay-shifted full-time
+    tensor, so concatenating the yielded outputs reproduces the one-shot
+    `run` on the concatenated stream bit-for-bit while peak host+device
+    memory scales with the chunk length only — the paper's
+    infinite-time-window streaming mode.
+
+    The plan is compiled once up front; `mod`, when given, must be an
+    iterable aligned with `chunks` (one modulator window per chunk).
+    """
+    if plan is None:
+        plan = compile_program(nodes)
+    mods = iter(mod) if mod is not None else None
+    for x in chunks:
+        m = next(mods) if mods is not None else None
+        state, out, _ = run(nodes, params, x, state=state, plan=plan,
+                            mod=m, learn=learn, guard=guard)
+        yield state, out
+
+
 __all__ = ["Plan", "PlasticLower", "Segment", "compile_program",
-           "engine_mode", "check_mode", "run", "CROSS_ENGINE_ATOL",
+           "engine_mode", "check_mode", "run", "run_stream",
+           "CROSS_ENGINE_ATOL",
            "state_nbytes", "pack_states", "unpack_state",
            "FUSED_FF", "FUSED_REC", "FALLBACK",
            "LOWER_LI", "LOWER_LIF", "LOWER_ALIF", "LOWER_DHLIF",

@@ -40,8 +40,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
+import jax
 import numpy as np
 
 # ---------------------------------------------------------------------------
@@ -128,9 +129,14 @@ class FanOutEntry:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class EncodedTopology:
-    """Fan-in + fan-out tables for one connection (layer), executable."""
+    """Fan-in + fan-out tables for one connection (layer), executable.
+
+    Instances compare and hash by identity (eq=False): they ride inside jit
+    closures and params pytrees as *static* leaves, so they need a stable
+    hash, and ndarray fields make field-wise equality ill-defined anyway.
+    """
 
     kind: str                                  # fc | conv | sparse | pool | skip
     n_pre: int
@@ -170,6 +176,53 @@ class EncodedTopology:
         """(n_pre, n_post) dense weight matrix these tables encode."""
         raise NotImplementedError
 
+    # -- execution (jax lowerings; the plan compiler consumes these) ---------
+    @property
+    def shape(self) -> Tuple[int, int]:
+        """(n_pre, n_post): lets topology-backed connections stand in for a
+        dense weight tensor anywhere shapes are inspected."""
+        return (self.n_pre, self.n_post)
+
+    def exec_channel(self) -> str:
+        """'dense' routes through the existing spikemm channels (type-2 FC);
+        'gather' routes IE tables through the block-gather spikemm family."""
+        return "gather"
+
+    def coo(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(pre, post, weight) triples derived from the IE tables — never by
+        materializing `dense_equivalent()`. Duplicated (pre, post) entries
+        accumulate, matching `propagate()`."""
+        raise NotImplementedError
+
+    def lowering(self, bk: Optional[int] = None, bn: Optional[int] = None):
+        """Block-gather tables for the `spikemm_gather` kernel family, built
+        once from `coo()` and cached on the instance."""
+        from repro.kernels.spikemm import gather as _g
+        cached = getattr(self, "_gather_tables", None)
+        if cached is not None and (bk is None or cached.bk == bk) \
+                and (bn is None or cached.bn == bn):
+            return cached
+        pre, post, w = self.coo()
+        tables = _g.build_gather_tables(
+            pre, post, w, self.n_pre, self.n_post,
+            bk=bk or _g.DEFAULT_BK, bn=bn or _g.DEFAULT_BN)
+        object.__setattr__(self, "_gather_tables", tables)
+        return tables
+
+    def apply_spikes(self, x):
+        """jax-executable matmul-equivalent: (M, n_pre) -> (M, n_post).
+
+        FC (type-2 IEs) routes to the dense/sparse `spikemm` channels on its
+        incremental-addressed weight matrix; sparse/conv/pool IE tables route
+        to the `spikemm_gather` channel without a dense materialization.
+        """
+        if self.exec_channel() == "dense":
+            from repro.kernels.spikemm.ops import spikemm
+            import jax.numpy as jnp
+            return spikemm(x, jnp.asarray(self.weights))
+        from repro.kernels.spikemm.gather import spikemm_gather
+        return spikemm_gather(x, self.lowering())
+
 
 # ---------------------------------------------------------------------------
 # Encoders
@@ -191,8 +244,11 @@ class _FC(EncodedTopology):
     def dense_equivalent(self):
         return self.weights
 
+    def exec_channel(self):
+        return "dense"
 
-def encode_fc(weights: np.ndarray, n_cores: int = 1) -> EncodedTopology:
+
+def _build_fc(weights: np.ndarray, n_cores: int = 1) -> EncodedTopology:
     """Type-2 IE: the whole fully-connected layer costs 4 fields per core
     partition (parallel-send distributes destination neurons over `n_cores`
     NCs — without the mechanism the fan-in table would replicate N times)."""
@@ -247,8 +303,36 @@ class _Conv(EncodedTopology):
             dense[i] = self.propagate(eye[i])
         return dense
 
+    def coo(self):
+        m = self.meta
+        h, w_, cin, cout, k = m["h"], m["w"], m["c_in"], m["c_out"], m["k"]
+        ho, wo = m["h_out"], m["w_out"]
+        pos_rep, t_all, ax_all = [], [], []
+        for pos, de in enumerate(self.fan_in):
+            for ie in de.ies:
+                pos_rep.append(np.full(len(ie.targets), pos, np.int64))
+                t_all.append(ie.targets)
+                ax_all.append(ie.local_axons)
+        pos_rep = np.concatenate(pos_rep) if pos_rep else np.empty(0, np.int64)
+        t_all = np.concatenate(t_all) if t_all else np.empty(0, np.int64)
+        ax_all = np.concatenate(ax_all) if ax_all else np.empty(0, np.int64)
+        ky, kx = np.divmod(ax_all, k)
+        # one single-channel IE serves every (c_in, c_out) pair (eq. 4):
+        # replicate by axon arithmetic, weights straight from the filter bank.
+        ci = np.arange(cin, dtype=np.int64)
+        co = np.arange(cout, dtype=np.int64)
+        full = (cout, cin, len(pos_rep))
+        pre = np.broadcast_to(
+            ci[None, :, None] * (h * w_) + pos_rep[None, None, :], full)
+        post = np.broadcast_to(
+            co[:, None, None] * (ho * wo) + t_all[None, None, :], full)
+        w = self.weights[:, :, ky, kx]                  # (cout, cin, P)
+        return (np.ascontiguousarray(pre).ravel(),
+                np.ascontiguousarray(post).ravel().astype(np.int64),
+                np.ascontiguousarray(w).ravel().astype(np.float32))
 
-def encode_conv(filters: np.ndarray, h: int, w: int, stride: int = 1,
+
+def _build_conv(filters: np.ndarray, h: int, w: int, stride: int = 1,
                 pad: int = 0) -> EncodedTopology:
     """Type-3 IE with decoupled weight addressing (paper eq. 4).
 
@@ -309,8 +393,16 @@ class _Sparse(EncodedTopology):
             dense[pre, cols] = self.weights[row_ptr[pre]:row_ptr[pre + 1]]
         return dense
 
+    def coo(self):
+        # bitmap rows in row-major order match the packed-weight order the
+        # encoder wrote, for both IE types (type 1 local axons index it, type
+        # 0 FINDIDX prefix-decodes it).
+        rows, cols = np.nonzero(self.meta["bitmap"])
+        return (rows.astype(np.int64), cols.astype(np.int64),
+                np.asarray(self.weights, np.float32))
 
-def encode_sparse(dense: np.ndarray, ie_type: int = 1) -> EncodedTopology:
+
+def _build_sparse(dense: np.ndarray, ie_type: int = 1) -> EncodedTopology:
     """Sparse connection. ie_type 0 = bitmap/FINDIDX (min storage);
     ie_type 1 = explicit (neuron, axon) pairs (min decode latency)."""
     assert ie_type in (0, 1)
@@ -357,29 +449,103 @@ class _Pool(EncodedTopology):
         eye = np.eye(self.n_pre, dtype=np.float32)
         return np.stack([self.propagate(eye[i]) for i in range(self.n_pre)])
 
+    def coo(self):
+        m = self.meta
+        h, w_, c, k = m["h"], m["w"], m["c"], m["k"]
+        ho, wo = h // k, w_ // k
+        pos_l, t_l = [], []
+        for pos, de in enumerate(self.fan_in):
+            for ie in de.ies:
+                pos_l.append(np.full(len(ie.targets), pos, np.int64))
+                t_l.append(ie.targets)
+        pos_a = np.concatenate(pos_l) if pos_l else np.empty(0, np.int64)
+        t_a = np.concatenate(t_l) if t_l else np.empty(0, np.int64)
+        ch = np.arange(c, dtype=np.int64)
+        full = (c, len(pos_a))
+        pre = np.broadcast_to(ch[:, None] * (h * w_) + pos_a[None, :], full)
+        post = np.broadcast_to(ch[:, None] * (ho * wo) + t_a[None, :], full)
+        w = np.full(pre.size, 1.0 / (k * k), np.float32)
+        return (np.ascontiguousarray(pre).ravel(),
+                np.ascontiguousarray(post).ravel(), w)
 
-def encode_pool(h: int, w: int, c: int, k: int) -> EncodedTopology:
+
+def _build_pool(h: int, w: int, c: int, k: int) -> EncodedTopology:
     """Average pooling as type-0 IEs (paper Fig. 5a): target IDs only,
-    weight implicit (1/k^2); storage ∝ single-channel positions."""
+    weight implicit (1/k^2); storage ∝ single-channel positions. Positions in
+    a partial window at a non-divisible edge have no pooled target and get an
+    empty IE."""
     ho, wo = h // k, w // k
     fan_in = []
+    n_valid = 0
     for pos in range(h * w):
         y, x = divmod(pos, w)
-        t = (y // k) * wo + (x // k)
+        if y // k < ho and x // k < wo:
+            t = np.asarray([(y // k) * wo + (x // k)])
+            n_valid += 1
+        else:
+            t = np.empty(0, np.int64)
         fan_in.append(FanInDE(tag=0, ie_type=0,
-                              ies=[FanInIE(ie_type=0, targets=np.asarray([t]))]))
+                              ies=[FanInIE(ie_type=0, targets=t)]))
     fan_out = [FanOutEntry(global_axon=i // (h * w)) for i in range(c * h * w)]
     return _Pool("pool", c * h * w, c * ho * wo, fan_in, fan_out, None,
-                 meta=dict(h=h, w=w, c=c, k=k, n_connections=c * h * w))
+                 meta=dict(h=h, w=w, c=c, k=k, n_connections=c * n_valid))
 
 
-def encode_skip(source: EncodedTopology, delay: int) -> EncodedTopology:
+class _SparseCOO(EncodedTopology):
+    """Sparse connectivity built straight from (pre, post, weight) triples —
+    the brain-scale path: nothing O(n_pre * n_post) is ever allocated, unlike
+    `encode(dense, kind='sparse')` whose FINDIDX bitmap is dense-sized."""
+
+    def propagate(self, spikes):
+        pre, post, w = self.meta["coo"]
+        out = np.zeros(self.n_post, np.float32)
+        mask = spikes[pre] != 0
+        np.add.at(out, post[mask], w[mask] * spikes[pre][mask])
+        return out
+
+    def dense_equivalent(self):
+        pre, post, w = self.meta["coo"]
+        dense = np.zeros((self.n_pre, self.n_post), np.float32)
+        np.add.at(dense, (pre, post), w)
+        return dense
+
+    def coo(self):
+        return self.meta["coo"]
+
+
+def _build_sparse_coo(triples, n_pre: int, n_post: int) -> EncodedTopology:
+    """Type-1 sparse encoding from explicit (pre, post, weight) arrays.
+
+    Fan-in IEs carry (neuron ID, local axon) pairs exactly as `encode_sparse`
+    builds them, but grouped with numpy so million-edge tables stay cheap;
+    the FanInDE list is per *occupied* presynaptic row only."""
+    pre, post, w = (np.asarray(triples[0], np.int64),
+                    np.asarray(triples[1], np.int64),
+                    np.asarray(triples[2], np.float32))
+    if not (len(pre) == len(post) == len(w)):
+        raise ValueError("pre/post/weight lengths differ")
+    order = np.lexsort((post, pre))
+    pre, post, w = pre[order], post[order], w[order]
+    rows, starts = np.unique(pre, return_index=True)
+    ends = np.append(starts[1:], len(pre))
+    fan_in = [FanInDE(tag=0, ie_type=1,
+                      ies=[FanInIE(ie_type=1, targets=post[s:e],
+                                   local_axons=np.arange(s, e))])
+              for s, e in zip(starts, ends)]
+    fan_out = [FanOutEntry(global_axon=int(r)) for r in rows]
+    return _SparseCOO("sparse", n_pre, n_post, fan_in, fan_out, w,
+                      meta={"coo": (pre, post, w), "row_ids": rows,
+                            "n_connections": int(len(pre))})
+
+
+def _build_skip(source: EncodedTopology, delay: int) -> EncodedTopology:
     """Skip connection (Fig. 8c): reuse the source fan-out DT; the only new
     state is the delayed-fire type bit + delay slots — NO relay neurons, NO
     duplicated DEs. Returns a shallow copy with the delayed flag set."""
     fan_out = [dataclasses.replace(e, delayed=True) for e in source.fan_out]
     return dataclasses.replace(source, kind="skip", fan_out=fan_out,
-                               meta={**source.meta, "delay": delay})
+                               meta={**source.meta, "delay": delay,
+                                     "base_kind": source.kind})
 
 
 def relay_baseline_bits(source: EncodedTopology, delay: int) -> int:
@@ -389,3 +555,151 @@ def relay_baseline_bits(source: EncodedTopology, delay: int) -> int:
     per_relay = (BITS["neuron_id"] + BITS["global_axon"] + BITS["route"]
                  + 2 * BITS["count"])
     return source.n_pre * delay * per_relay
+
+
+# ---------------------------------------------------------------------------
+# Encoding registry: one polymorphic entry point over the per-kind builders,
+# mirroring register_neuron / register_synapse.
+# ---------------------------------------------------------------------------
+
+ENCODING_REGISTRY: Dict[str, Callable[..., EncodedTopology]] = {}
+
+
+def register_encoding(name: str, factory: Callable[..., EncodedTopology], *,
+                      override: bool = False) -> None:
+    """Register an encoding factory `factory(obj, **opts) -> EncodedTopology`.
+
+    Duplicate names raise unless override=True, same contract as
+    `register_neuron` / `register_synapse`.
+    """
+    if name in ENCODING_REGISTRY and not override:
+        raise ValueError(
+            f"encoding {name!r} already registered; pass override=True "
+            "to replace it")
+    ENCODING_REGISTRY[name] = factory
+
+
+def _infer_kind(obj) -> str:
+    if isinstance(obj, EncodedTopology):
+        return "skip"
+    arr = np.asarray(obj) if obj is not None else None
+    if arr is not None and arr.ndim == 4:
+        return "conv"
+    if arr is not None and arr.ndim == 2:
+        # mostly-zero matrices encode smaller as sparse tables; otherwise the
+        # type-2 incremental addressing of FC is the natural fit
+        return "sparse" if np.mean(arr == 0) >= 0.5 else "fc"
+    raise TypeError(
+        f"cannot infer encoding kind from {type(obj).__name__}; pass "
+        f"kind=... (registered: {sorted(ENCODING_REGISTRY)})")
+
+
+def encode(obj=None, kind: Optional[str] = None, **opts) -> EncodedTopology:
+    """Polymorphic constructor: `encode(weights, kind='fc', n_cores=4)`,
+    `encode(filters, kind='conv', h=.., w=..)`, `encode(None, kind='pool',
+    h=.., w=.., c=.., k=..)`, `encode(source, kind='skip', delay=2)`, ...
+
+    With kind=None the kind is inferred: EncodedTopology -> skip, 4-D array
+    -> conv, 2-D array -> fc or sparse by zero fraction.
+    """
+    if kind is None:
+        kind = _infer_kind(obj)
+    try:
+        factory = ENCODING_REGISTRY[kind]
+    except KeyError:
+        raise KeyError(f"unknown encoding kind {kind!r}; registered: "
+                       f"{sorted(ENCODING_REGISTRY)}") from None
+    return factory(obj, **opts)
+
+
+def _fc_factory(obj, n_cores: int = 1):
+    return _build_fc(np.asarray(obj), n_cores=n_cores)
+
+
+def _conv_factory(obj, h: int, w: int, stride: int = 1, pad: int = 0):
+    return _build_conv(np.asarray(obj), h, w, stride=stride, pad=pad)
+
+
+def _sparse_factory(obj, ie_type: int = 1):
+    return _build_sparse(np.asarray(obj), ie_type=ie_type)
+
+
+def _pool_factory(obj, h: int, w: int, c: int, k: int):
+    if obj is not None:
+        raise TypeError("pool encoding takes no tensor; pass h/w/c/k")
+    return _build_pool(h, w, c, k)
+
+
+def _skip_factory(obj, delay: int):
+    if not isinstance(obj, EncodedTopology):
+        raise TypeError("skip encoding wraps an existing EncodedTopology")
+    return _build_skip(obj, delay)
+
+
+def _sparse_coo_factory(obj, n_pre: int, n_post: int):
+    return _build_sparse_coo(obj, n_pre, n_post)
+
+
+register_encoding("fc", _fc_factory)
+register_encoding("conv", _conv_factory)
+register_encoding("sparse", _sparse_factory)
+register_encoding("pool", _pool_factory)
+register_encoding("skip", _skip_factory)
+register_encoding("sparse_coo", _sparse_coo_factory)
+
+
+# -- legacy names: thin wrappers over the registry --------------------------
+
+
+def encode_fc(weights: np.ndarray, n_cores: int = 1) -> EncodedTopology:
+    return encode(weights, kind="fc", n_cores=n_cores)
+
+
+def encode_conv(filters: np.ndarray, h: int, w: int, stride: int = 1,
+                pad: int = 0) -> EncodedTopology:
+    return encode(filters, kind="conv", h=h, w=w, stride=stride, pad=pad)
+
+
+def encode_sparse(dense: np.ndarray, ie_type: int = 1) -> EncodedTopology:
+    return encode(dense, kind="sparse", ie_type=ie_type)
+
+
+def encode_pool(h: int, w: int, c: int, k: int) -> EncodedTopology:
+    return encode(None, kind="pool", h=h, w=w, c=c, k=k)
+
+
+def encode_skip(source: EncodedTopology, delay: int) -> EncodedTopology:
+    return encode(source, kind="skip", delay=delay)
+
+
+def encode_sparse_coo(pre, post, w, n_pre: int, n_post: int) -> EncodedTopology:
+    return encode((pre, post, w), kind="sparse_coo", n_pre=n_pre,
+                  n_post=n_post)
+
+
+# ---------------------------------------------------------------------------
+# Pytree registration: a topology in a params dict is a *static* leaf — no
+# traced children, identity-hashed aux — so jit embeds its tables as
+# constants and tree_map never touches it.
+# ---------------------------------------------------------------------------
+
+
+def _topo_flatten(t):
+    return (), t
+
+
+def _topo_unflatten(aux, children):
+    del children
+    return aux
+
+
+for _cls in (EncodedTopology, _FC, _Conv, _Sparse, _SparseCOO, _Pool):
+    jax.tree_util.register_pytree_node(_cls, _topo_flatten, _topo_unflatten)
+
+
+__all__ = [
+    "BITS", "FanInIE", "FanInDE", "FanOutEntry", "EncodedTopology",
+    "ENCODING_REGISTRY", "register_encoding", "encode",
+    "encode_fc", "encode_conv", "encode_sparse", "encode_pool",
+    "encode_skip", "encode_sparse_coo", "relay_baseline_bits",
+]

@@ -245,6 +245,7 @@ _KERNEL_MODULES = (
     "repro.kernels.lifrec.ops",
     "repro.kernels.alifrec.ops",
     "repro.kernels.spikemm.ops",
+    "repro.kernels.spikemm.gather",
     "repro.kernels.attention.ops",
     "repro.kernels.stdp.ops",
 )

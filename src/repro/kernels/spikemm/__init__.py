@@ -1,4 +1,7 @@
 from repro.kernels.spikemm.ops import spikemm, block_occupancy
 from repro.kernels.spikemm.ref import spikemm_ref
+from repro.kernels.spikemm.gather import (GatherTables, build_gather_tables,
+                                          spikemm_gather)
 
-__all__ = ["spikemm", "block_occupancy", "spikemm_ref"]
+__all__ = ["spikemm", "block_occupancy", "spikemm_ref",
+           "GatherTables", "build_gather_tables", "spikemm_gather"]

@@ -1,0 +1,354 @@
+"""Block-gather spikemm channel: execute IE tables, not dense matrices.
+
+`core/topology.py` stores connectivity the way the chip does — typed fan-in
+IE tables (sparse pairs, FINDIDX bitmaps, conv axon arithmetic). This module
+is their execution form: the (pre, post, weight) triples an `EncodedTopology`
+derives from its IE tables are packed ONCE into a block-level COO —
+
+    jj[t], kk[t]   post-/pre- block coordinates of occupied (bk, bn) blocks,
+                   sorted post-block-major (the accumulation order),
+    wblk[t]        the (bk, bn) dense patch of weights inside that block,
+    act[t]         0 marks sentinels (one per empty post block, so every
+                   output tile is visited and initialized exactly once)
+
+— and `spikemm_gather` contracts an (M, n_pre) spike raster against those
+tables. Compute scales with the number of *occupied* blocks E, never with
+n_pre * n_post: the dense matrix is never materialized, which is what makes
+10^5-10^6-neuron topologies executable at all.
+
+Two implementations, registered as the `spikemm_gather` family so dispatch,
+parity, autotuning, and incident fallbacks come from the registry:
+
+  * the Pallas kernel scalar-prefetches (jj, kk, act) — the IE tables ARE
+    the index maps — over a grid (M/bm, E), accumulating consecutive
+    same-jj entries in a VMEM scratch tile exactly like the block-sparse
+    spikemm channel;
+  * the XLA ref scans entry slabs: gather the spike block each entry names,
+    one batched (bk x bn) matmul per slab, scatter-add into the output by
+    post block. On CPU this is what converts table sparsity into wall-clock.
+
+The VJP needs no weight cotangent (topology weights are host-side tables,
+not trainable params): d_spikes runs the SAME kernel on the transposed
+tables, so the backward pass is as event-bounded as the forward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from types import SimpleNamespace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import registry
+from repro.kernels.common import pad_axis
+
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+_REF_SLAB = 128   # entries contracted per scan step in the XLA ref
+
+
+@dataclasses.dataclass(eq=False)
+class GatherTables:
+    """Packed block-level COO for one encoded topology (host-side numpy).
+
+    Identity-hashed (eq=False): instances ride through jit/custom_vjp as
+    static values and through pytrees as leafless containers, so the jj/kk
+    index maps become embedded constants — exactly how the chip's IE tables
+    are configuration, not data.
+    """
+
+    jj: np.ndarray        # (E,) int32 post-block ids, non-decreasing
+    kk: np.ndarray        # (E,) int32 pre-block ids
+    act: np.ndarray       # (E,) int32, 0 = sentinel (empty post block)
+    wblk: np.ndarray      # (E, bk, bn) float32 packed weight blocks
+    n_pre: int
+    n_post: int
+    bk: int
+    bn: int
+
+    def __post_init__(self):
+        self._device = None
+        self._transposed = None
+
+    @property
+    def n_entries(self) -> int:
+        return int(self.act.sum())
+
+    def device(self):
+        """Memoized device copies of the tables."""
+        if self._device is None:
+            self._device = SimpleNamespace(
+                jj=jnp.asarray(self.jj), kk=jnp.asarray(self.kk),
+                act=jnp.asarray(self.act), wblk=jnp.asarray(self.wblk))
+        return self._device
+
+    def transpose(self) -> "GatherTables":
+        """Tables for x @ W^T: swap block roles, transpose each patch."""
+        if self._transposed is None:
+            real = self.act != 0
+            self._transposed = _finalize_tables(
+                self.kk[real], self.jj[real],
+                self.wblk[real].transpose(0, 2, 1),
+                n_pre=self.n_post, n_post=self.n_pre,
+                bk=self.bn, bn=self.bk)
+            self._transposed._transposed = self
+        return self._transposed
+
+
+def _tables_flatten(t):
+    return (), t
+
+
+def _tables_unflatten(aux, children):
+    del children
+    return aux
+
+
+jax.tree_util.register_pytree_node(GatherTables, _tables_flatten,
+                                   _tables_unflatten)
+
+
+def _finalize_tables(jj, kk, wblk, *, n_pre, n_post, bk, bn) -> GatherTables:
+    """Sort entries post-block-major and add one inactive sentinel per empty
+    post block so the kernel visits (and zero-initializes) every output
+    tile."""
+    jj = np.asarray(jj, np.int32)
+    kk = np.asarray(kk, np.int32)
+    wblk = np.asarray(wblk, np.float32).reshape(-1, bk, bn)
+    act = np.ones(len(jj), np.int32)
+    n_post_blocks = max(1, -(-n_post // bn))
+    missing = np.setdiff1d(np.arange(n_post_blocks, dtype=np.int32),
+                           np.unique(jj))
+    if len(missing):
+        jj = np.concatenate([jj, missing])
+        kk = np.concatenate([kk, np.zeros(len(missing), np.int32)])
+        act = np.concatenate([act, np.zeros(len(missing), np.int32)])
+        wblk = np.concatenate(
+            [wblk, np.zeros((len(missing), bk, bn), np.float32)])
+    order = np.lexsort((kk, jj))
+    return GatherTables(jj=np.ascontiguousarray(jj[order]),
+                        kk=np.ascontiguousarray(kk[order]),
+                        act=np.ascontiguousarray(act[order]),
+                        wblk=np.ascontiguousarray(wblk[order]),
+                        n_pre=int(n_pre), n_post=int(n_post),
+                        bk=int(bk), bn=int(bn))
+
+
+def build_gather_tables(pre, post, w, n_pre: int, n_post: int, *,
+                        bk: int = DEFAULT_BK, bn: int = DEFAULT_BN
+                        ) -> GatherTables:
+    """Pack (pre, post, weight) COO triples into block tables.
+
+    Duplicated (pre, post) pairs accumulate into the same block slot,
+    matching the event-driven `propagate()` semantics. Out-of-range indices
+    raise — ghost IE entries must never silently scatter.
+    """
+    pre = np.asarray(pre, np.int64).ravel()
+    post = np.asarray(post, np.int64).ravel()
+    w = np.asarray(w, np.float32).ravel()
+    if not (len(pre) == len(post) == len(w)):
+        raise ValueError("pre/post/weight lengths differ")
+    if len(pre):
+        if pre.min() < 0 or pre.max() >= n_pre:
+            raise ValueError(f"ghost pre index outside [0, {n_pre})")
+        if post.min() < 0 or post.max() >= n_post:
+            raise ValueError(f"ghost post index outside [0, {n_post})")
+    n_pre_blocks = max(1, -(-n_pre // bk))
+    bid = (post // bn) * n_pre_blocks + (pre // bk)
+    uniq = np.unique(bid)
+    wblk = np.zeros((len(uniq), bk, bn), np.float32)
+    if len(pre):
+        rank = np.searchsorted(uniq, bid)
+        np.add.at(wblk, (rank, pre % bk, post % bn), w)
+    jj = (uniq // n_pre_blocks).astype(np.int32)
+    kk = (uniq % n_pre_blocks).astype(np.int32)
+    return _finalize_tables(jj, kk, wblk, n_pre=n_pre, n_post=n_post,
+                            bk=bk, bn=bn)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: IE tables as scalar-prefetched index maps
+# ---------------------------------------------------------------------------
+
+
+def _gather_kernel(jj_ref, kk_ref, act_ref, s_ref, w_ref, o_ref, acc_scr):
+    del kk_ref  # consumed by the index maps only
+    t = pl.program_id(1)
+    prev = jj_ref[jnp.maximum(t - 1, 0)]
+
+    @pl.when((t == 0) | (jj_ref[t] != prev))
+    def _():                                  # first entry for this post block
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(act_ref[t] > 0)
+    def _():                                  # sentinels skip the MXU
+        acc_scr[...] += jax.lax.dot_general(
+            s_ref[...], w_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # Same-jj entries are contiguous, so consecutive writes land in the same
+    # VMEM-resident output tile; Mosaic flushes it once per (i, jj).
+    o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "bn", "jb", "interpret"))
+def _gather_pallas(jj, kk, act, spikes, wblk, *, bm, bk, bn, jb,
+                   interpret=False):
+    """spikes: (M, Kb*bk) padded; wblk: (E, bk, bn); out: (M, jb*bn)."""
+    M = spikes.shape[0]
+    grid = (M // bm, jj.shape[0])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, t, jj, kk, act: (i, kk[t])),
+            pl.BlockSpec((1, bk, bn), lambda i, t, jj, kk, act: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, t, jj, kk, act: (i, jj[t])),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, jb * bn), spikes.dtype),
+        interpret=interpret,
+    )(jj, kk, act, spikes, wblk)
+
+
+def _pallas_impl(spikes, tables, *, blocks, interpret):
+    bm = blocks["bm"]
+    bk, bn = tables.bk, tables.bn
+    kb = max(1, -(-tables.n_pre // bk))
+    jb = max(1, -(-tables.n_post // bn))
+    s_p, _ = pad_axis(spikes, 0, bm)
+    s_p = jnp.pad(s_p, ((0, 0), (0, kb * bk - spikes.shape[1])))
+    dt = tables.device()
+    out = _gather_pallas(dt.jj, dt.kk, dt.act, s_p, dt.wblk,
+                         bm=bm, bk=bk, bn=bn, jb=jb, interpret=interpret)
+    return out[:spikes.shape[0], :tables.n_post]
+
+
+# ---------------------------------------------------------------------------
+# XLA reference: slab-scanned gather + scatter-add (compute ∝ E)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_post", "jb", "bk", "bn"))
+def _ref_scan(spikes, jj, kk, wblk, *, n_post, jb, bk, bn):
+    M = spikes.shape[0]
+    sb = spikes.reshape(M, spikes.shape[1] // bk, bk)
+    n_slabs = wblk.shape[0] // _REF_SLAB
+    slabs = (jj.reshape(n_slabs, _REF_SLAB),
+             kk.reshape(n_slabs, _REF_SLAB),
+             wblk.reshape(n_slabs, _REF_SLAB, bk, bn))
+
+    def body(out, sl):
+        jj_s, kk_s, w_s = sl
+        s_sel = jnp.take(sb, kk_s, axis=1)            # (M, C, bk)
+        prod = jnp.einsum("mck,ckn->cmn", s_sel, w_s,
+                          preferred_element_type=jnp.float32)
+        return out.at[jj_s].add(prod), None
+
+    out0 = jnp.zeros((jb, M, bn), jnp.float32)
+    out, _ = jax.lax.scan(body, out0, slabs)
+    return (out.transpose(1, 0, 2).reshape(M, jb * bn)[:, :n_post]
+            .astype(spikes.dtype))
+
+
+def _ref_impl(spikes, tables):
+    bk, bn = tables.bk, tables.bn
+    kb = max(1, -(-tables.n_pre // bk))
+    jb = max(1, -(-tables.n_post // bn))
+    s_p = jnp.pad(spikes, ((0, 0), (0, kb * bk - spikes.shape[1])))
+    dt = tables.device()
+    pad = -len(tables.jj) % _REF_SLAB
+    jj = jnp.pad(dt.jj, (0, pad))                     # padded slots carry
+    kk = jnp.pad(dt.kk, (0, pad))                     # zero wblk: no effect
+    wblk = jnp.pad(dt.wblk, ((0, pad), (0, 0), (0, 0)))
+    return _ref_scan(s_p, jj, kk, wblk, n_post=tables.n_post, jb=jb,
+                     bk=bk, bn=bn)
+
+
+# ---------------------------------------------------------------------------
+# public entry + VJP + registration
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def spikemm_gather(spikes: jax.Array, tables: GatherTables,
+                   bm: Optional[int] = None,
+                   force_pallas: bool = False) -> jax.Array:
+    """IE-table contraction: (M, n_pre) spikes -> (M, n_post) currents."""
+    return _impl(spikes, tables, bm, force_pallas)
+
+
+def _impl(spikes, tables, bm, force_pallas):
+    overrides = {"bm": bm} if bm is not None else {}
+    return registry.dispatch("spikemm_gather", (spikes, tables),
+                             force_pallas=force_pallas, overrides=overrides)
+
+
+def _fwd(spikes, tables, bm, force_pallas):
+    return _impl(spikes, tables, bm, force_pallas), None
+
+
+def _bwd(tables, bm, force_pallas, _res, g):
+    # d_spikes = g @ W^T: the same gather kernel on the transposed tables —
+    # the backward pass touches exactly the occupied blocks too. Weight
+    # cotangents don't exist: topology weights are tables, not params.
+    return (_impl(g, tables.transpose(), bm, force_pallas).astype(g.dtype),)
+
+
+spikemm_gather.defvjp(_fwd, _bwd)
+
+
+def _make_inputs(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    m, n_pre, n_post = 96, 260, 200               # non-multiples: padding
+    mask = np.asarray(jax.random.uniform(k1, (n_pre, n_post)) < 0.05)
+    pre, post = np.nonzero(mask)
+    w = np.asarray(jax.random.normal(k2, (len(pre),), jnp.float32))
+    tables = build_gather_tables(pre, post, w, n_pre, n_post)
+    spikes = (jax.random.uniform(k3, (m, n_pre)) < 0.3).astype(jnp.float32)
+    return spikes, tables
+
+
+registry.register(registry.KernelSpec(
+    name="spikemm_gather",
+    ref=_ref_impl,
+    pallas=_pallas_impl,
+    apply=lambda args, force=False: spikemm_gather(*args, None, force),
+    # bk/bn are frozen at table-build time (they shape wblk); only the
+    # spike-row tile is dispatch-tunable.
+    block_axes=(registry.BlockAxis("bm", "M", preferred=128, align=8),),
+    dims_of=lambda spikes, tables: {
+        "M": spikes.shape[0], "K": tables.n_pre, "N": tables.n_post,
+        "E": len(tables.jj), "bk": tables.bk, "bn": tables.bn},
+    candidates=({"bm": 64}, {"bm": 128}, {"bm": 256}),
+    make_inputs=_make_inputs,
+    diff_argnums=(0,),
+    tol=1e-4,
+    # spike block + weight block in, out tile + fp32 accumulator
+    vmem_bytes=lambda dims, b: 4 * (b["bm"] * dims["bk"]
+                                    + dims["bk"] * dims["bn"]
+                                    + 2 * b["bm"] * dims["bn"]),
+    # Per row-block sweep the sorted entry list covers every post block
+    # (sentinels included), i.e. the full N extent exactly once.
+    tile_model=registry.TileModel(
+        out=(("M", "bm"), ("N", None)),
+        tiles=lambda dims, b: {
+            "spikes": (b["bm"], dims["bk"]), "wblk": (dims["bk"], dims["bn"]),
+            "acc": (b["bm"], dims["bn"]), "out": (b["bm"], dims["bn"])}),
+))
+
+
+__all__ = ["GatherTables", "build_gather_tables", "spikemm_gather",
+           "DEFAULT_BK", "DEFAULT_BN"]

@@ -9,10 +9,13 @@ Two entry points live here:
     `metrics.py`: long-lived stateful sessions continuously batched into
     fixed-shape cohorts over one resident jitted `plan.run` window step,
     with an LRU byte-budgeted state cache (host spill + bit-identical
-    restore) and operational metrics. See `engine.py` for the design.
+    restore) and operational metrics. See `engine.py` for the design;
+    `client.py` adds the generator-based `StreamClient` facade for
+    application code that wants chunks-in / windows-out.
 """
 
 from repro.serve.loop import ServeConfig, ServeResult, Request, generate
+from repro.serve.client import StreamClient
 from repro.serve.engine import (EngineConfig, BatchedEngine, NaiveEngine,
                                 make_engine)
 from repro.serve.metrics import Histogram, ServeMetrics
@@ -23,4 +26,5 @@ __all__ = [
     "ServeConfig", "ServeResult", "Request", "generate",
     "EngineConfig", "BatchedEngine", "NaiveEngine", "make_engine",
     "Histogram", "ServeMetrics", "Scheduler", "Session", "StateCache",
+    "StreamClient",
 ]

@@ -217,7 +217,9 @@ class BatchedEngine:
         for n in self.nodes:
             for c in n.connections:
                 if c.src == "input":
-                    w = self.params[n.name][c.weight_key]
+                    topo = events.resolve_topology(c, n.name, self.params)
+                    w = (topo if topo is not None
+                         else self.params[n.name][c.weight_key])
                     return int(w.shape[-2])
         raise ValueError("no node reads 'input'; cannot infer n_in")
 

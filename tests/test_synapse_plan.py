@@ -287,23 +287,39 @@ def test_plastic_run_under_jit():
                                atol=1e-5)
 
 
-def test_learned_decay_rule_takes_step_fallback():
-    """A rule the matcher refuses (learned trace decay) must run through
-    the per-step fallback — and still learn inside plan.run."""
+def test_learned_decay_rule_hoists_fused_and_matches_interpreter():
+    """Learned per-synapse trace decays no longer force the per-step
+    fallback: a sigmoid-resolved decay plane hoists through linrec exactly
+    like a constant, so the matcher keeps the rule on the fused stdp_seq
+    path — and the fused weight trajectory matches the per-step
+    interpreter bit-for-bit (within cross-engine tolerance)."""
     rule = SynapseProgram(
         traces=(TraceVar("x", "pre", Decay("learned", 0.9, "tau_x")),),
         terms=(UpdateTerm(0.02, pre=("x",), post=("spikes",)),))
     nodes, params = make_plastic_ff(jax.random.PRNGKey(11), n_in=6,
                                     n_hidden=10, rule=rule)
+    # heterogeneous decay logits: each presynaptic trace gets its own tau
+    params["hidden"]["syn:input"] = {
+        "tau_x": jnp.linspace(-1.5, 2.0, 6, dtype=jnp.float32)}
     compiled = plan.compile_program(nodes)
-    assert compiled.plastic[0].lower == plan.SYN_STEP
-    assert "learned trace decay" in compiled.plastic[0].reason
+    assert compiled.plastic[0].lower == plan.SYN_SEQ
     x = _spikes(KEY, (9, 2, 6))
     st, _, _ = plan.run(nodes, params, x, plan=compiled)
-    ref = _reference_syn(nodes, params, x, "hidden", rule)
+    # interpreter reference with the same learned-decay params
+    _, _, recs = events.run(nodes, params, x, record=("hidden",))
+    ref = plasticity.synapse_run(rule, params["hidden"]["w_input"], x,
+                                 recs["hidden"],
+                                 params=params["hidden"]["syn:input"])
     for k in ref:
         np.testing.assert_allclose(np.asarray(st["hidden"]["syn:input"][k]),
-                                   np.asarray(ref[k]), atol=1e-5, rtol=1e-5)
+                                   np.asarray(ref[k]), atol=1e-5, rtol=1e-5,
+                                   err_msg=k)
+    # and the forced per-step fallback agrees with the fused path
+    st2, _, _ = plan.run(nodes, params, x, plan=_force_step(compiled))
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(st["hidden"]["syn:input"][k]),
+                                   np.asarray(st2["hidden"]["syn:input"][k]),
+                                   atol=1e-5, rtol=1e-5, err_msg=k)
 
 
 def test_custom_weight_key_honored_by_both_engines():

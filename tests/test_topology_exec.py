@@ -1,0 +1,264 @@
+"""Compressed-topology execution: `Connection(topology=...)` edges must be
+numerically identical to the dense weights they encode, through BOTH
+engines, for every IE type — without ever materializing
+`dense_equivalent()` on the compressed path. Plus the streaming-memory
+contract: `plan.run_stream` holds peak RSS constant in stream length while
+the one-shot full-time path grows linearly."""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import events, plan
+from repro.core import topology as topo
+from repro.core.events import Connection
+from repro.core.neuron import LI, LIF
+from repro.core.snn_layers import ff_integrate
+from repro.kernels.spikemm.gather import build_gather_tables, spikemm_gather
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _spikes(key, shape, rate=0.35):
+    return (jax.random.uniform(key, shape) < rate).astype(jnp.float32)
+
+
+def _dense_w(enc):
+    return jnp.asarray(enc.dense_equivalent(), jnp.float32)
+
+
+def _encodings(rng):
+    """One encoding per IE type (+pool), modest but non-block-aligned."""
+    dense = rng.standard_normal((37, 29)).astype(np.float32) * 0.3
+    sp = dense * (rng.random((37, 29)) < 0.15)
+    filt = 0.4 * rng.standard_normal((3, 2, 3, 3)).astype(np.float32)
+    pre, post = np.nonzero(rng.random((45, 33)) < 0.08)
+    w = 0.5 * rng.standard_normal(len(pre)).astype(np.float32)
+    return {
+        "fc_t2": topo.encode(dense, kind="fc", n_cores=3),
+        "sparse_t0": topo.encode(sp, kind="sparse", ie_type=0),
+        "sparse_t1": topo.encode(sp, kind="sparse", ie_type=1),
+        "sparse_coo_t1": topo.encode((pre, post, w), kind="sparse_coo",
+                                     n_pre=45, n_post=33),
+        "conv_t3": topo.encode(filt, kind="conv", h=6, w=5),
+        "pool_t0": topo.encode(None, kind="pool", h=6, w=6, c=2, k=2),
+    }
+
+
+@pytest.fixture(scope="module")
+def encodings():
+    return _encodings(np.random.default_rng(3))
+
+
+# ---------------------------------------------------------------------------
+# kernel-level: apply_spikes == dense matmul for every IE type
+# ---------------------------------------------------------------------------
+
+
+def test_apply_spikes_matches_dense_all_types(encodings):
+    for i, (name, enc) in enumerate(encodings.items()):
+        x = _spikes(jax.random.fold_in(KEY, i), (9, enc.n_pre))
+        got = np.asarray(enc.apply_spikes(x))
+        want = np.asarray(x @ _dense_w(enc))
+        np.testing.assert_allclose(got, want, atol=plan.CROSS_ENGINE_ATOL,
+                                   rtol=1e-4, err_msg=name)
+
+
+def test_gather_vjp_matches_dense(encodings):
+    enc = encodings["sparse_t1"]
+    x = _spikes(KEY, (6, enc.n_pre))
+    w = _dense_w(enc)
+    g1 = jax.grad(lambda s: jnp.sum(jnp.tanh(enc.apply_spikes(s))))(x)
+    g2 = jax.grad(lambda s: jnp.sum(jnp.tanh(s @ w)))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_gather_tables_reject_ghost_indices():
+    with pytest.raises(ValueError, match="ghost"):
+        build_gather_tables(np.array([0, 99]), np.array([1, 2]),
+                            np.ones(2, np.float32), 10, 10, bk=8, bn=8)
+
+
+def test_gather_duplicate_entries_accumulate():
+    t = build_gather_tables(np.array([1, 1]), np.array([2, 2]),
+                            np.array([0.25, 0.75], np.float32), 4, 4,
+                            bk=4, bn=4)
+    x = jnp.zeros((1, 4)).at[0, 1].set(1.0)
+    assert float(spikemm_gather(x, t)[0, 2]) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# program-level: topology-backed Connections through BOTH engines
+# ---------------------------------------------------------------------------
+
+
+def _two_layer(enc, conn):
+    """input --(topology|dense)--> h --dense--> readout."""
+    ks = jax.random.split(KEY, 2)
+    w_ro = 0.5 * jax.random.normal(ks[0], (enc.n_post, 4), jnp.float32)
+    nodes = [
+        events.LayerNode("h", LIF(tau=0.8, v_th=0.6), ff_integrate,
+                         (conn,), enc.n_post),
+        events.LayerNode("ro", LI(tau=0.9), ff_integrate, ("h",), 4),
+    ]
+    return nodes, {"h": {}, "ro": {"w_h": w_ro}}
+
+
+@pytest.mark.parametrize("name", ["fc_t2", "sparse_t0", "sparse_t1",
+                                  "sparse_coo_t1", "conv_t3", "pool_t0"])
+def test_topology_connection_matches_dense_both_engines(encodings, name):
+    enc = encodings[name]
+    x = _spikes(jax.random.fold_in(KEY, 11), (7, 2, enc.n_pre))
+
+    nodes_t, params_t = _two_layer(enc, Connection("input", topology=enc))
+    nodes_d, params_d = _two_layer(enc, Connection("input"))
+    params_d["h"]["w_input"] = _dense_w(enc)
+
+    for engine in (plan.run, events.run):
+        _, o_t, _ = engine(nodes_t, params_t, x)
+        _, o_d, _ = engine(nodes_d, params_d, x)
+        np.testing.assert_allclose(np.asarray(o_t), np.asarray(o_d),
+                                   atol=plan.CROSS_ENGINE_ATOL, rtol=1e-4,
+                                   err_msg=f"{name}:{engine.__module__}")
+
+
+def test_topology_by_params_key_and_from_topology(encodings):
+    """A str topology resolves through params; from_topology lifts the
+    skip delay out of meta — and a delayed skip edge equals a plain
+    delayed dense edge."""
+    base = encodings["sparse_t1"]
+    skip = topo.encode(base, kind="skip", delay=2)
+    conn = Connection.from_topology("a", skip)
+    assert conn.delay == 2 and conn.topology is skip
+
+    # input --dense--> a --(skip@2)--> h --dense--> ro; delayed edges need
+    # a stateful source (the stepper keeps rings per node, not for input)
+    ks = jax.random.split(KEY, 2)
+    w_in = 0.5 * jax.random.normal(ks[0], (6, skip.n_pre), jnp.float32)
+    w_ro = 0.5 * jax.random.normal(ks[1], (skip.n_post, 4), jnp.float32)
+
+    def net(edge):
+        nodes = [
+            events.LayerNode("a", LIF(tau=0.7, v_th=0.5), ff_integrate,
+                             ("input",), skip.n_pre),
+            events.LayerNode("h", LIF(tau=0.8, v_th=0.6), ff_integrate,
+                             (edge,), skip.n_post),
+            events.LayerNode("ro", LI(tau=0.9), ff_integrate, ("h",), 4),
+        ]
+        return nodes, {"a": {"w_input": w_in}, "h": {},
+                       "ro": {"w_h": w_ro}}
+
+    nodes_t, params_t = net(Connection("a", topology="T", delay=2))
+    params_t["h"]["T"] = skip
+    nodes_d, params_d = net(Connection("a", delay=2))
+    params_d["h"]["w_a"] = _dense_w(skip)
+    x = _spikes(KEY, (9, 2, 6))
+    for engine in (plan.run, events.run):
+        _, o_t, _ = engine(nodes_t, params_t, x)
+        _, o_d, _ = engine(nodes_d, params_d, x)
+        np.testing.assert_allclose(np.asarray(o_t), np.asarray(o_d),
+                                   atol=plan.CROSS_ENGINE_ATOL, rtol=1e-4)
+
+
+def test_topology_connection_validation(encodings):
+    enc = encodings["sparse_t1"]
+    with pytest.raises(ValueError, match="plastic"):
+        from repro.core.plasticity import pair_stdp
+        Connection("input", topology=enc, plastic=pair_stdp())
+    with pytest.raises(ValueError, match="weight"):
+        Connection("input", topology=enc, weight="w_x")
+    with pytest.raises(TypeError, match="topology"):
+        Connection("input", topology=42)
+    with pytest.raises(KeyError, match="no such"):
+        events.resolve_topology(Connection("input", topology="nope"),
+                                "h", {"h": {}})
+
+
+def test_run_stream_equals_one_shot_with_topology(encodings):
+    enc = encodings["conv_t3"]
+    nodes, params = _two_layer(enc, Connection("input", topology=enc))
+    x = _spikes(KEY, (20, 2, enc.n_pre))
+    _, o1, _ = plan.run(nodes, params, x)
+    outs = [o for _, o in plan.run_stream(
+        nodes, params, [x[:6], x[6:7], x[7:15], x[15:]])]
+    np.testing.assert_allclose(np.asarray(o1),
+                               np.asarray(jnp.concatenate(outs, 0)),
+                               atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# streaming memory: constant in T for run_stream, linear for one-shot
+# ---------------------------------------------------------------------------
+
+_MEM_SCRIPT = textwrap.dedent("""
+    import sys
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core import events, plan
+    from repro.core import topology as topo
+    from repro.core.events import Connection
+    from repro.core.neuron import LI, LIF
+    from repro.core.snn_layers import ff_integrate
+
+    mode, T = sys.argv[1], int(sys.argv[2])
+    n, band, chunk = 8192, 64, 64
+    rows = np.repeat(np.arange(n), 2 * band + 1)
+    cols = rows + np.tile(np.arange(-band, band + 1), n)
+    keep = (cols >= 0) & (cols < n)
+    w = 0.05 * np.ones(keep.sum(), np.float32)
+    enc = topo.encode((rows[keep], cols[keep], w), kind="sparse_coo",
+                      n_pre=n, n_post=n)
+    nodes = [
+        events.LayerNode("h", LIF(tau=0.8, v_th=0.6), ff_integrate,
+                         (Connection("input", topology=enc),), n),
+        events.LayerNode("ro", LI(tau=0.9), ff_integrate, ("h",), 8),
+    ]
+    params = {"h": {}, "ro": {"w_h": 0.1 * np.ones((n, 8), np.float32)}}
+    rng = np.random.default_rng(0)
+
+    def chunks():
+        for _ in range(T // chunk):
+            yield jnp.asarray((rng.random((chunk, 1, n)) < 0.2),
+                              jnp.float32)
+
+    if mode == "stream":
+        for st, out in plan.run_stream(nodes, params, chunks()):
+            out.block_until_ready()
+    else:  # one-shot: the delay-shifted full-time path
+        x = jnp.concatenate(list(chunks()), axis=0)
+        _, out, _ = plan.run(nodes, params, x)
+        out.block_until_ready()
+    # peak RSS via VmHWM: unlike ru_maxrss it resets on exec, so a large
+    # launching process (e.g. pytest with other suites resident) cannot
+    # taint the measurement through fork
+    hwm = [l for l in open("/proc/self/status") if l.startswith("VmHWM")]
+    print(hwm[0].split()[1])
+""")
+
+
+def _peak_rss_kb(mode, T):
+    r = subprocess.run([sys.executable, "-c", _MEM_SCRIPT, mode, str(T)],
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    return int(r.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_streaming_memory_constant_in_stream_length():
+    """ISSUE acceptance: 16x more stream steps must not move streaming
+    peak RSS (beyond allocator noise), while the one-shot path — which
+    materializes (T, B, n) activity tensors — pays linearly."""
+    short = _peak_rss_kb("stream", 256)
+    long_ = _peak_rss_kb("stream", 4096)
+    oneshot = _peak_rss_kb("oneshot", 4096)
+    # constant: 16x longer stream costs < 25% + 64MB slack
+    assert long_ < short * 1.25 + 64 * 1024, (short, long_)
+    # linear: the full-time path carries >= the raw input tensor extra
+    # (4096 * 8192 * 4 bytes = 128 MB) over the streaming footprint
+    assert oneshot > long_ + 100 * 1024, (oneshot, long_)
